@@ -1,0 +1,64 @@
+"""Factor analysis over the Fig. 5 campaign (the paper's §7 future-work
+item: 'conducting an ANOVA analysis on the collected data to identify the
+most relevant and influential factors').
+
+Reads results/fig5_degradation.csv and reports main effects (mean
+degradation per factor level) plus the selector x chunk interaction — a
+fixed-effects decomposition appropriate for the factorial design."""
+
+from __future__ import annotations
+
+import csv
+import os
+from collections import defaultdict
+
+RES = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def run():
+    path = os.path.join(RES, "fig5_degradation.csv")
+    if not os.path.exists(path):
+        raise FileNotFoundError("run the degradation bench first")
+    rows = list(csv.DictReader(open(path)))
+    deg = [float(r["degradation_pct"]) for r in rows]
+    grand = sum(deg) / len(deg)
+
+    def effect(key_fn):
+        groups = defaultdict(list)
+        for r in rows:
+            groups[key_fn(r)].append(float(r["degradation_pct"]))
+        return {k: sum(v) / len(v) - grand for k, v in groups.items()}
+
+    out = {
+        "grand_mean": grand,
+        "selector": effect(lambda r: r["selector"]),
+        "chunk": effect(lambda r: r["chunk"]),
+        "reward": effect(lambda r: r["reward"] or "expert"),
+        "selector_x_chunk": effect(lambda r: f"{r['selector']}|{r['chunk']}"),
+    }
+    # variance explained (between-group share per factor)
+    n = len(deg)
+    ss_tot = sum((d - grand) ** 2 for d in deg)
+    shares = {}
+    for factor in ("selector", "chunk", "reward"):
+        groups = defaultdict(list)
+        for r in rows:
+            key = r[factor] if factor != "reward" else (r["reward"] or "expert")
+            groups[key].append(float(r["degradation_pct"]))
+        ss_f = sum(len(v) * (sum(v) / len(v) - grand) ** 2
+                   for v in groups.values())
+        shares[factor] = ss_f / max(ss_tot, 1e-12)
+    out["variance_share"] = shares
+    return out
+
+
+def main() -> list:
+    r = run()
+    lines = [("anova_grand_mean_deg", r["grand_mean"], "pct")]
+    for factor in ("selector", "chunk", "reward"):
+        for level, eff in sorted(r[factor].items(), key=lambda kv: kv[1]):
+            lines.append((f"anova_{factor}_{level}", eff,
+                          f"main effect (pct vs grand mean)"))
+        lines.append((f"anova_{factor}_variance_share",
+                      r["variance_share"][factor] * 100, "% of SS_total"))
+    return lines

@@ -1,0 +1,78 @@
+"""L2 transfer benchmark — step-plan autotuning on a real (reduced) model:
+per-plan fixed baselines vs online selection, wall-clock per step."""
+
+from __future__ import annotations
+
+import csv
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_reduce
+from repro.data import DataConfig, TokenPipeline
+from repro.distributed import ExecutionPlan, StepAutoTuner, make_plan_builder
+from repro.models import init_params
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results")
+
+PLANS = [ExecutionPlan("mb1_remat", 1, True),
+         ExecutionPlan("mb2_remat", 2, True),
+         ExecutionPlan("mb4_remat", 4, True),
+         ExecutionPlan("mb1_noremat", 1, False)]
+
+
+def run(steps: int = 24, method: str = "ExhaustiveSel"):
+    cfg = dataclasses.replace(smoke_reduce(get_config("llama3.2-3b")),
+                              d_model=256, d_ff=512, n_layers=4,
+                              vocab_size=1024)
+    opt_cfg = AdamWConfig(lr=1e-3, total_steps=steps)
+    data = DataConfig(vocab_size=1024, seq_len=128, global_batch=8, seed=0)
+    pipe = TokenPipeline(data)
+    build = make_plan_builder(cfg, opt_cfg)
+    rows = []
+
+    def fresh_state():
+        p = init_params(cfg, jax.random.PRNGKey(0))
+        return p, adamw_init(p, opt_cfg)
+
+    # fixed plans
+    for plan in PLANS:
+        fn = build(plan)
+        params, opt = fresh_state()
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+        fn(params, opt, batch)  # warmup/compile
+        t0 = time.perf_counter()
+        for s in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
+            params, opt, m = fn(params, opt, batch)
+        jax.block_until_ready(m["loss"])
+        rows.append((f"fixed_{plan.name}",
+                     (time.perf_counter() - t0) / steps))
+
+    # autotuned
+    tuner = StepAutoTuner(PLANS, build, method=method)
+    params, opt = fresh_state()
+    times = []
+    for s in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
+        (params, opt, m), plan, dt = tuner.step(params, opt, batch)
+        times.append(dt)
+    rows.append((f"autotune_{method}", sum(times) / steps))
+    rows.append((f"autotune_{method}_postexplore",
+                 sum(times[len(PLANS):]) / max(1, len(times) - len(PLANS))))
+    return rows, tuner
+
+
+def main() -> list:
+    os.makedirs(OUT, exist_ok=True)
+    rows, tuner = run()
+    with open(os.path.join(OUT, "autotune.csv"), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["method", "s_per_step"])
+        w.writerows(rows)
+    return [(name, t * 1e6, f"plan={tuner.selected_plan}")
+            for name, t in rows]

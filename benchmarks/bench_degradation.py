@@ -1,0 +1,49 @@
+"""Fig. 5 — performance degradation (%) vs Oracle for every selection method
+x chunk parameter x RL reward, per app-system pair.
+
+Full fidelity (T = 500, all 18 pairs, 5 reps) takes hours on one CPU core;
+the default here is a representative subset at T = 300 — override with
+``python -m benchmarks.run --full``."""
+
+from __future__ import annotations
+
+import csv
+import os
+
+from repro.sim import APPLICATIONS, SYSTEMS, run_campaign_cell
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results")
+
+DEFAULT_PAIRS = [("sphynx", "cascadelake"), ("stream", "cascadelake"),
+                 ("tc", "epyc"), ("mandelbrot", "broadwell")]
+
+
+def run(pairs=None, T: int = 300, reps: int = 2):
+    pairs = pairs or DEFAULT_PAIRS
+    rows = []
+    cells = {}
+    for app, system in pairs:
+        cell = run_campaign_cell(app, system, T=T, reps=reps)
+        cells[(app, system)] = cell
+        for (sel, mode, reward), deg in sorted(cell.degradation().items()):
+            total = cell.selector_runs[(sel, mode, reward)].total
+            rows.append((app, system, sel, mode, reward or "", deg, total,
+                         cell.oracle_total))
+    return rows, cells
+
+
+def main(full: bool = False) -> list:
+    os.makedirs(OUT, exist_ok=True)
+    pairs = ([(a, s) for a in APPLICATIONS for s in SYSTEMS]
+             if full else None)
+    rows, _ = run(pairs=pairs, T=500 if full else 300,
+                  reps=3 if full else 2)
+    with open(os.path.join(OUT, "fig5_degradation.csv"), "w",
+              newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["application", "system", "selector", "chunk", "reward",
+                    "degradation_pct", "total_s", "oracle_s"])
+        w.writerows(rows)
+    return [(f"deg_{a}_{s}_{sel}_{mode}{('_' + r) if r else ''}", t * 1e6,
+             f"{d:+.1f}%")
+            for a, s, sel, mode, r, d, t, _o in rows]

@@ -1,0 +1,113 @@
+"""§Roofline — three-term roofline per (arch x shape x mesh) from the
+compiled dry-run artifacts (results/dryrun_all.jsonl).
+
+    compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16 / chip)
+    memory     = HLO_bytes / HBM_bw                (819 GB/s / chip)
+    collective = wire_bytes / ICI_bw               (50 GB/s / chip)
+
+(all terms per-chip; the dry-run records per-device quantities, so dividing
+by per-chip peaks is the instructed `X / (chips * peak)` with the global
+numerators pre-divided.)
+
+MODEL_FLOPS = 6*N_active*tokens (train), 2*N_active*tokens (prefill),
+2*N_active*batch (decode).  roofline_fraction = the MFU upper bound implied
+by the dominant term — the §Perf score.
+"""
+
+from __future__ import annotations
+
+import csv
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link / chip
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+DEFAULT_IN = os.path.join(RESULTS, "dryrun_all.jsonl")
+
+SHAPE_TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+                "decode_32k": 128, "long_500k": 1}
+SHAPE_KIND = {"train_4k": "train", "prefill_32k": "prefill",
+              "decode_32k": "decode", "long_500k": "decode"}
+
+
+def model_flops(rec: Dict) -> float:
+    kind = SHAPE_KIND[rec["shape"]]
+    tokens = SHAPE_TOKENS[rec["shape"]]
+    n = rec["active_params"]
+    mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[kind]
+    return mult * n * tokens
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if "skipped" in rec or "error" in rec:
+        return None
+    chips = rec["devices"]
+    compute = rec["flops_per_device"] / PEAK_FLOPS
+    memory = rec["bytes_per_device"] / HBM_BW
+    coll = rec["collective_total"] / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec) / chips
+    useful = mf / max(rec["flops_per_device"], 1.0)
+    bound = max(terms.values())
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "hbm_per_device_gb": (rec["memory"]["peak_bytes"] or 0) / 1e9,
+    }
+
+
+def load(path: str = DEFAULT_IN) -> List[Dict]:
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    return recs
+
+
+def _rows(path):
+    rows, skipped = [], 0
+    for rec in load(path):
+        a = analyze_record(rec)
+        if a is None:
+            skipped += 1
+        else:
+            rows.append(a)
+    return rows, skipped
+
+
+def main() -> list:
+    out = []
+    for tag, fname in (("", "dryrun_all.jsonl"),
+                       ("opt_", "dryrun_optimized.jsonl")):
+        path = os.path.join(RESULTS, fname)
+        if not os.path.exists(path):
+            continue
+        rows, skipped = _rows(path)
+        csv_path = os.path.join(RESULTS, f"roofline_{tag or 'base_'}.csv"
+                                .replace("_.csv", ".csv"))
+        with open(csv_path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+        for r in rows:
+            if r["mesh"] != "16x16":
+                continue   # roofline table is single-pod (per instructions)
+            out.append((f"roofline_{tag}{r['arch']}_{r['shape']}",
+                        max(r["compute_s"], r["memory_s"],
+                            r["collective_s"]) * 1e6,
+                        f"dom={r['dominant']},"
+                        f"frac={r['roofline_fraction']:.3f},"
+                        f"useful={r['useful_flops_ratio']:.2f}"))
+        out.append((f"roofline_{tag}skipped_cells", float(skipped),
+                    "long_500k rule"))
+    return out

@@ -1,0 +1,53 @@
+"""Figs. 7 & 8 — per-instance selections + selection-share pies for STREAM
+on Cascade-Lake (no expChunk) and SPHYNX on EPYC (expChunk)."""
+
+from __future__ import annotations
+
+import csv
+import os
+
+from repro.sim import run_selector
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results")
+
+SCENARIOS = [
+    # (figure, app, system, chunk_mode)   — the paper's two showcases
+    ("fig7", "stream", "cascadelake", "default"),
+    ("fig8", "sphynx", "epyc", "expChunk"),
+]
+SELECTORS = [("ExhaustiveSel", None), ("ExpertSel", None),
+             ("QLearn", "LT"), ("QLearn", "LIB"),
+             ("SARSA", "LT"), ("SARSA", "LIB")]
+
+
+def run(T: int = 300):
+    out = {}
+    for fig, app, system, mode in SCENARIOS:
+        for sel, reward in SELECTORS:
+            r = run_selector(app, system, sel, chunk_mode=mode,
+                             reward=reward, T=T)
+            loop = list(r.history)[0]
+            out[(fig, app, system, sel, reward)] = (
+                r.history[loop], r.selection_shares(loop), r.total)
+    return out
+
+
+def main() -> list:
+    os.makedirs(OUT, exist_ok=True)
+    data = run()
+    path = os.path.join(OUT, "fig7_fig8_traces.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["figure", "app", "system", "selector", "reward",
+                    "instance", "algorithm", "loop_time_s", "lib_pct"])
+        for (fig, app, system, sel, reward), (hist, shares, total) in \
+                data.items():
+            for t, (a, lt, lib) in enumerate(hist):
+                w.writerow([fig, app, system, sel, reward or "", t, a,
+                            f"{lt:.6f}", f"{lib:.2f}"])
+    rows = []
+    for (fig, app, system, sel, reward), (hist, shares, total) in data.items():
+        top = max(shares.items(), key=lambda kv: kv[1])
+        rows.append((f"{fig}_{sel}{('_' + reward) if reward else ''}",
+                     total * 1e6, f"top={top[0]}:{top[1]:.0%}"))
+    return rows

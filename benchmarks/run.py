@@ -1,0 +1,67 @@
+"""Benchmark harness — one bench per paper table/figure plus the framework
+benches.  Prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--full]
+
+Benches:
+    chunks       Fig. 1 & 2  chunk-size progressions
+    cov          Fig. 4      c.o.v. per app-system pair
+    degradation  Fig. 5      selector degradation vs Oracle
+    traces       Figs. 7 & 8 per-instance selection traces
+    serving      L3          chunk-scheduled dispatch vs selectors
+    autotune     L2          step-plan selection on a real model
+    roofline     §Roofline   three-term roofline per dry-run cell
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="full-fidelity Fig. 5 campaign (hours)")
+    args = ap.parse_args()
+
+    from . import (bench_anova, bench_autotune, bench_chunks, bench_cov,
+                   bench_degradation, bench_roofline, bench_serving,
+                   bench_traces)
+    benches = {
+        "chunks": bench_chunks.main,
+        "cov": bench_cov.main,
+        "degradation": lambda: bench_degradation.main(full=args.full),
+        "anova": bench_anova.main,
+        "traces": bench_traces.main,
+        "serving": bench_serving.main,
+        "autotune": bench_autotune.main,
+        "roofline": bench_roofline.main,
+    }
+    if args.only:
+        benches = {args.only: benches[args.only]}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        t0 = time.time()
+        try:
+            rows = fn()
+            for row in rows:
+                print(f"{row[0]},{row[1]:.3f},{row[2]}")
+            print(f"bench_{name}_wall,{(time.time() - t0) * 1e6:.0f},ok",
+                  flush=True)
+        except FileNotFoundError as e:
+            print(f"bench_{name}_wall,0,SKIPPED({e})", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"bench_{name}_wall,0,FAILED({type(e).__name__}: {e})",
+                  flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

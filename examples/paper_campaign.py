@@ -1,0 +1,43 @@
+"""Reproduce the paper's factorial campaign (Table 2 / Fig. 5) at a chosen
+scale and print the degradation-vs-Oracle table.
+
+    PYTHONPATH=src python examples/paper_campaign.py                 # subset
+    PYTHONPATH=src python examples/paper_campaign.py --apps all --T 500
+"""
+
+import argparse
+
+from repro.sim import APPLICATIONS, SYSTEMS, run_campaign_cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--apps", default="sphynx,stream")
+    ap.add_argument("--systems", default="cascadelake")
+    ap.add_argument("--T", type=int, default=300)
+    ap.add_argument("--reps", type=int, default=2)
+    args = ap.parse_args()
+
+    apps = (list(APPLICATIONS) if args.apps == "all"
+            else args.apps.split(","))
+    systems = (list(SYSTEMS) if args.systems == "all"
+               else args.systems.split(","))
+
+    for app in apps:
+        for system in systems:
+            cell = run_campaign_cell(app, system, T=args.T, reps=args.reps)
+            print(f"\n=== {app} on {system} ===   "
+                  f"Oracle={cell.oracle_total:.2f}s  "
+                  f"c.o.v.={cell.sweep.cov():.3f}")
+            for k, d in sorted(cell.degradation().items(),
+                               key=lambda kv: kv[1]):
+                sel, mode, reward = k
+                r = cell.selector_runs[k]
+                shares = r.selection_shares()
+                top = max(shares, key=shares.get) if shares else "-"
+                tag = f"{sel}+{reward}" if reward else sel
+                print(f"  {tag:15s} {mode:9s} {d:+7.1f}%   mostly->{top}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: the paper's core loop in 60 lines.
+
+1. build the 12-algorithm portfolio and inspect chunk schedules;
+2. run one simulated SPHYNX loop instance per algorithm;
+3. let Q-Learn (LT reward, explore-first) select online and compare against
+   Oracle and ExhaustiveSel.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import ALGORITHM_NAMES, exp_chunk, make_selector
+from repro.sim import (get_application, get_system, run_instance,
+                       run_selector, sweep_portfolio)
+
+
+def main():
+    app = get_application("sphynx")
+    system = get_system("cascadelake")
+    profile = app.loops(0)[0]
+    cp = exp_chunk(profile.N, system.P)
+    print(f"SPHYNX gravity loop: N={profile.N:,} iterations, "
+          f"P={system.P} threads, expChunk={cp}")
+
+    print("\n-- one loop instance per scheduling algorithm (expChunk) --")
+    for alg, name in enumerate(ALGORITHM_NAMES):
+        r = run_instance(profile, system, alg, cp, np.random.default_rng(0))
+        print(f"  {name:12s} {r.loop_time * 1e3:7.1f} ms   "
+              f"LIB={r.lib:5.1f}%   chunks={r.n_chunks}")
+
+    T = 200
+    print(f"\n-- online selection over {T} time-steps (expChunk) --")
+    sweep = sweep_portfolio("sphynx", "cascadelake", T=T, reps=1)
+    oracle = sweep.oracle_times()[:T].sum()
+    for sel, reward in [("ExhaustiveSel", None), ("ExpertSel", None),
+                        ("QLearn", "LT"), ("QLearn", "LIB"),
+                        ("SARSA", "LT"), ("RandomSel", None)]:
+        run = run_selector("sphynx", "cascadelake", sel, reward=reward,
+                           chunk_mode="expChunk", T=T)
+        deg = (run.total - oracle) / oracle * 100
+        shares = run.selection_shares()
+        top = max(shares, key=shares.get)
+        tag = f"{sel}+{reward}" if reward else sel
+        print(f"  {tag:15s} total={run.total:7.2f}s  vs Oracle {deg:+6.1f}%  "
+              f"mostly->{top}")
+    print(f"  {'Oracle':15s} total={oracle:7.2f}s")
+
+
+if __name__ == "__main__":
+    main()

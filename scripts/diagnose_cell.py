@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Hillclimb profiler: compile one cell and print the top contributors —
+collectives and data-movement instructions by (bytes x trips).  This is the
+'profile' of the dry-run methodology (lowered IR, not wall clock)."""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+from repro.launch import dryrun  # noqa: E402
+from repro.launch.hlo_analysis import (HloAnalyzer, _bytes_of,  # noqa: E402
+                                       collective_wire, COLL_KINDS)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--moe-groups", type=int, default=1)
+    ap.add_argument("--attn-remat", action="store_true")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    # monkey-patch run_cell to keep the compiled object
+    from repro.configs import SHAPES, get_config
+    import repro.launch.dryrun as dr
+    hlo_holder = {}
+    orig = jax.stages.Lowered.compile
+
+    def capture(self, *a, **k):
+        c = orig(self, *a, **k)
+        hlo_holder["hlo"] = c.as_text()
+        return c
+    jax.stages.Lowered.compile = capture
+    res = dr.run_cell(args.arch, args.shape, args.multi,
+                      microbatches=args.microbatches,
+                      moe_groups=args.moe_groups,
+                      attn_remat=args.attn_remat)
+    print({k: v for k, v in res.items()
+           if k in ("flops_per_device", "bytes_per_device",
+                    "collective_total")})
+    print("bytes_by:", {k: f"{v/1e9:.0f}GB"
+                        for k, v in res.get("bytes_by_category", {}).items()})
+
+    hlo = hlo_holder["hlo"]
+    an = HloAnalyzer(hlo, 512 if args.multi else 256)
+
+    # per-instruction contributions with trip multipliers
+    contrib = []
+
+    def walk(comp, mult, stack=()):
+        if comp in stack:
+            return
+        for ins in an.comps.get(comp, []):
+            if ins.op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                mt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}',
+                               ins.line)
+                trips = int(mt.group(1)) if mt else 1
+                if mb:
+                    walk(mb.group(1), mult * trips, stack + (comp,))
+                continue
+            if ins.op in ("call", "conditional", "custom-call"):
+                for mr in re.finditer(r"(?:to_apply=|calls=)%?([\w\.\-]+)",
+                                      ins.line):
+                    walk(mr.group(1), mult, stack + (comp,))
+                continue
+            sz = _bytes_of(ins.rtype)
+            is_coll = any(ins.op.startswith(k) for k in COLL_KINDS)
+            if is_coll or ins.op in ("copy", "transpose", "reshape",
+                                     "concatenate", "broadcast", "slice",
+                                     "pad", "gather", "scatter", "sort",
+                                     "fusion", "dynamic-slice",
+                                     "dynamic-update-slice"):
+                meta = re.search(r'op_name="([^"]+)"', ins.line)
+                contrib.append((sz * mult, ins.op, ins.rtype[:48],
+                                (meta.group(1)[-90:] if meta else "")))
+    walk(an.entry, 1.0)
+    contrib.sort(reverse=True)
+    print(f"\ntop {args.top} data-movement/collective instructions "
+          f"(bytes x trips):")
+    for sz, op, rt, meta in contrib[:args.top]:
+        print(f"  {sz/1e9:9.1f}GB  {op:22s} {rt:48s} {meta}")
+
+
+if __name__ == "__main__":
+    main()

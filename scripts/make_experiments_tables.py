@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Regenerate the EXPERIMENTS.md dry-run/roofline tables from the sweep
+JSONLs (baseline + optimized)."""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.bench_roofline import analyze_record  # noqa: E402
+
+RES = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(name):
+    path = os.path.join(RES, name)
+    if not os.path.exists(path):
+        return []
+    return [json.loads(l) for l in open(path)]
+
+
+def dryrun_table(recs):
+    out = ["| arch | shape | mesh | HLO TFLOP/dev | HLO TB/dev | "
+           "wire GB/dev (ag/ar/a2a/cp) | HBM peak GB/dev |",
+           "|---|---|---|---:|---:|---|---:|"]
+    for r in recs:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                       f"| SKIP (sub-quadratic rule) | — |")
+            continue
+        c = r["collective_wire_bytes_per_device"]
+        coll = "/".join(f"{c[k] / 1e9:.0f}"
+                        for k in ("all-gather", "all-reduce", "all-to-all",
+                                  "collective-permute"))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['flops_per_device'] / 1e12:,.1f} "
+            f"| {r['bytes_per_device'] / 1e12:.2f} | {coll} "
+            f"| {r['memory']['peak_bytes'] / 1e9:.1f} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs, base=None):
+    base_map = {}
+    if base:
+        for r in base:
+            if r.get("mesh") == "16x16" and "skipped" not in r:
+                a = analyze_record(r)
+                base_map[(a["arch"], a["shape"])] = a
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO flops | roofline frac" +
+           (" | vs baseline bound |" if base else " |"),
+           "|---|---|---:|---:|---:|---|---:|---:|" + ("---:|" if base else "")]
+    for r in recs:
+        if r.get("mesh") != "16x16" or "skipped" in r:
+            continue
+        a = analyze_record(r)
+        bound = max(a["compute_s"], a["memory_s"], a["collective_s"])
+        row = (f"| {a['arch']} | {a['shape']} | {a['compute_s']:.2f} "
+               f"| {a['memory_s']:.2f} | {a['collective_s']:.2f} "
+               f"| {a['dominant']} | {a['useful_flops_ratio']:.2f} "
+               f"| {a['roofline_fraction']:.4f} |")
+        if base:
+            b = base_map.get((a["arch"], a["shape"]))
+            if b:
+                b_bound = max(b["compute_s"], b["memory_s"],
+                              b["collective_s"])
+                row += f" {b_bound / bound:.2f}x |"
+            else:
+                row += " — |"
+        out.append(row)
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    base = load("dryrun_all.jsonl")
+    opt = load("dryrun_optimized.jsonl")
+    with open(os.path.join(RES, "tables.md"), "w") as f:
+        f.write("## Dry-run (baseline sweep)\n\n")
+        f.write(dryrun_table(base))
+        f.write("\n\n## Roofline (baseline, single-pod)\n\n")
+        f.write(roofline_table(base))
+        if opt:
+            f.write("\n\n## Dry-run (optimized sweep)\n\n")
+            f.write(dryrun_table(opt))
+            f.write("\n\n## Roofline (optimized, single-pod; last column = "
+                    "baseline bound / optimized bound)\n\n")
+            f.write(roofline_table(opt, base))
+    print("wrote results/tables.md")

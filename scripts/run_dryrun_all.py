@@ -1,0 +1,55 @@
+#!/usr/bin/env python
+"""Drive the full dry-run sweep: one subprocess per (arch x shape x mesh)
+cell (isolation against OOM / crash; resumable).  Appends JSON lines to
+results/dryrun_all.jsonl and skips cells already present."""
+
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.configs import ARCH_NAMES, SHAPES  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results",
+                   os.environ.get("DRYRUN_OUT", "dryrun_all.jsonl"))
+
+
+def main():
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    done = set()
+    if os.path.exists(OUT):
+        with open(OUT) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+                except Exception:
+                    pass
+    env = dict(os.environ, PYTHONPATH="src")
+    cells = [(a, s, m) for a in ARCH_NAMES for s in SHAPES
+             for m in ("single", "multi")]
+    for arch, shape, mesh in cells:
+        mesh_name = "2x16x16" if mesh == "multi" else "16x16"
+        if (arch, shape, mesh_name) in done:
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh]
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           cwd=os.path.join(os.path.dirname(__file__), ".."),
+                           timeout=1800)
+        line = None
+        for ln in r.stdout.strip().splitlines():
+            if ln.startswith("{"):
+                line = ln
+        if line is None:
+            line = json.dumps({"arch": arch, "shape": shape,
+                               "mesh": mesh_name,
+                               "error": (r.stderr or "no output")[-400:]})
+        with open(OUT, "a") as f:
+            f.write(line + "\n")
+        print(line[:160], flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro — scheduling-algorithm selection for JAX/TPU (paper: 'A Comparative
+Study of OpenMP Scheduling Algorithm Selection Strategies', CS.DC 2025)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,29 @@
+"""repro.core — the paper's contribution: scheduling-algorithm portfolio and
+automated (expert- and RL-based) selection methods."""
+
+from .portfolio import (ALGORITHM_NAMES, N_ALGORITHMS, ADAPTIVE_SET,
+                        ChunkAlgorithm, alg_index, exp_chunk,
+                        apply_chunk_floor, make_algorithm, make_portfolio)
+from .metrics import (percent_load_imbalance, execution_imbalance,
+                      coefficient_of_variation)
+from .rewards import (RewardTracker, REWARD_POSITIVE, REWARD_NEUTRAL,
+                      REWARD_NEGATIVE, REWARD_TYPES)
+from .agents import QLearnAgent, SarsaAgent, explore_first_sequence
+from .selectors import (Selector, FixedSel, OracleSel, RandomSel,
+                        ExhaustiveSel, ExpertSel, QLearnSel, SarsaSel,
+                        make_selector, SELECTOR_NAMES)
+from .service import SelectionService
+from .persistence import (AgentStatsLogger, save_agent, load_agent,
+                          warm_start)
+
+__all__ = [
+    "ALGORITHM_NAMES", "N_ALGORITHMS", "ADAPTIVE_SET", "ChunkAlgorithm",
+    "alg_index", "exp_chunk", "apply_chunk_floor", "make_algorithm",
+    "make_portfolio", "percent_load_imbalance", "execution_imbalance",
+    "coefficient_of_variation", "RewardTracker", "REWARD_POSITIVE",
+    "REWARD_NEUTRAL", "REWARD_NEGATIVE", "REWARD_TYPES", "QLearnAgent",
+    "SarsaAgent", "explore_first_sequence", "Selector", "FixedSel",
+    "OracleSel", "RandomSel", "ExhaustiveSel", "ExpertSel", "QLearnSel",
+    "SarsaSel", "make_selector", "SELECTOR_NAMES", "SelectionService",
+    "AgentStatsLogger", "save_agent", "load_agent", "warm_start",
+]

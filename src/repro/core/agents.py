@@ -1,0 +1,137 @@
+"""Tabular model-free RL agents (paper §3.4-3.5): Q-Learn and SARSA.
+
+State  = currently selected scheduling algorithm (12 states)
+Action = next scheduling algorithm            (12 actions)
+→ 144 state-action pairs, Q-table initialized to 0.
+
+Explore-first policy: before exploiting, visit *every* (state, action)
+transition once — an Eulerian circuit over the complete digraph with
+self-loops on 12 nodes (144 edges → 144 learning loop-instances, i.e. 28.8 %
+of a 500-step run, exactly the paper's figure).
+
+Updates (Eqs. 9-10):
+
+    SARSA:   Q(s,a) += alpha * (r + gamma * Q(s',a')        - Q(s,a))
+    Q-Learn: Q(s,a) += alpha * (r + gamma * max_a' Q(s',a') - Q(s,a))
+
+alpha = gamma = 0.5 by default; alpha decays by ``alpha_decay`` after the
+learning phase (KMP_RL_ALPHA_DECAY = 0.05).  The paper does not specify the
+decay operator; we default to the subtractive reading with a floor, and make
+it configurable (see DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from .portfolio import N_ALGORITHMS
+from .rewards import RewardTracker
+
+
+def explore_first_sequence(n: int = N_ALGORITHMS, start: int = 0) -> List[int]:
+    """Eulerian circuit on the complete digraph with self-loops on ``n`` nodes.
+
+    Returns the sequence of *actions* (length n*n) such that, starting from
+    ``start``, every ordered pair (state, action) — including self-pairs — is
+    visited exactly once.  Hierholzer's algorithm; deterministic.
+    """
+    # remaining out-edges per node, popped in descending order so that the
+    # walk tends to return to the start node last.
+    out = {u: list(range(n)) for u in range(n)}
+    stack = [start]
+    circuit: List[int] = []
+    while stack:
+        u = stack[-1]
+        if out[u]:
+            v = out[u].pop()
+            stack.append(v)
+        else:
+            circuit.append(stack.pop())
+    circuit.reverse()          # node sequence of length n*n + 1, starts at `start`
+    assert circuit[0] == start and len(circuit) == n * n + 1
+    return circuit[1:]         # the actions taken from each successive state
+
+
+@dataclass
+class TabularAgent:
+    """Shared machinery for Q-Learn / SARSA over the portfolio."""
+
+    n_actions: int = N_ALGORITHMS
+    alpha: float = 0.5
+    gamma: float = 0.5
+    alpha_decay: float = 0.05
+    alpha_min: float = 0.0
+    decay_mode: str = "subtractive"  # or "multiplicative"
+    reward: RewardTracker = field(default_factory=RewardTracker)
+    initial_state: int = 0
+
+    def __post_init__(self) -> None:
+        self.q = np.zeros((self.n_actions, self.n_actions), dtype=np.float64)
+        self.state = self.initial_state
+        self._explore = explore_first_sequence(self.n_actions,
+                                               start=self.initial_state)
+        self._t = 0  # loop-instance counter
+
+    # -- policy -------------------------------------------------------------
+    @property
+    def learning(self) -> bool:
+        return self._t < len(self._explore)
+
+    @property
+    def learning_steps(self) -> int:
+        return len(self._explore)
+
+    def select(self) -> int:
+        """Action for the next loop instance."""
+        if self.learning:
+            return self._explore[self._t]
+        return self._greedy(self.state)
+
+    def _greedy(self, s: int) -> int:
+        row = self.q[s]
+        return int(np.argmax(row))  # first max wins ties (portfolio order)
+
+    # -- learning -------------------------------------------------------------
+    def observe(self, action: int, x: float) -> None:
+        """Reward observation ``x`` (LT seconds or LIB %) for the instance just
+        executed with ``action``; performs the TD update and advances state."""
+        r = self.reward.reward(x)
+        s, a = self.state, action
+        s_next = action  # the executed algorithm becomes the new state
+        target = r + self.gamma * self._bootstrap(s_next)
+        self.q[s, a] += self.alpha * (target - self.q[s, a])
+        self.state = s_next
+        was_learning = self.learning
+        self._t += 1
+        if not was_learning and self.alpha_decay > 0.0:
+            if self.decay_mode == "subtractive":
+                self.alpha = max(self.alpha_min, self.alpha - self.alpha_decay)
+            else:
+                self.alpha = max(self.alpha_min,
+                                 self.alpha * (1.0 - self.alpha_decay))
+
+    def _bootstrap(self, s_next: int) -> float:  # pragma: no cover
+        raise NotImplementedError
+
+
+class QLearnAgent(TabularAgent):
+    """Eq. 10 — off-policy: bootstrap with max_a' Q(s', a')."""
+
+    def _bootstrap(self, s_next: int) -> float:
+        return float(self.q[s_next].max())
+
+
+class SarsaAgent(TabularAgent):
+    """Eq. 9 — on-policy: bootstrap with Q(s', a') for the action the current
+    policy would take in s' (greedy / next explore-first action)."""
+
+    def _bootstrap(self, s_next: int) -> float:
+        t_next = self._t + 1
+        if t_next < len(self._explore):
+            a_next = self._explore[t_next]
+        else:
+            a_next = self._greedy(s_next)
+        return float(self.q[s_next, a_next])

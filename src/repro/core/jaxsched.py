@@ -1,0 +1,111 @@
+"""Pure-JAX chunk-size schedules for the non-adaptive portfolio algorithms.
+
+``chunk_schedule(alg, N, P, chunk_param, max_chunks)`` returns the sequence of
+chunk sizes a central work queue would deliver, computed entirely with
+``jax.lax`` control flow so it can run under ``jit`` (e.g. inside the serving
+dispatcher or on-device microbatch planners).  Adaptive algorithms (AWF-*,
+mAF) depend on runtime telemetry and live in the stateful host classes
+(`repro.core.portfolio`); this module covers:
+
+    STATIC(0)  SS(1)  GSS(2)  AutoLLVM(3)  TSS(4)  mFAC2(6)
+
+Property tests assert exact agreement with the host classes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .portfolio import DIRECT_CHUNK_SET
+
+# static upper bound on schedule length for lax.while_loop buffers
+
+
+def _ceil_div(a, b):
+    return -(-a // b)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def chunk_schedule(alg: int, N, P, chunk_param, max_chunks: int = 4096):
+    """Returns (sizes[max_chunks] int32, count int32).
+
+    sizes[i] is the i-th delivered chunk; zeros beyond ``count``.  The floor
+    semantics match ``apply_chunk_floor``: for STATIC/SS the user chunk sets
+    the size directly; otherwise ``max(algorithm, max(1, chunk_param))``;
+    always clipped by the remaining iterations.
+    """
+    N = jnp.asarray(N, jnp.int64) if jax.config.read("jax_enable_x64") else jnp.asarray(N, jnp.int32)
+    P = jnp.asarray(P, jnp.int32)
+    chunk_param = jnp.asarray(chunk_param, jnp.int32)
+
+    def compute(alg, state, remaining, i):
+        """Raw (pre-floor) chunk for the i-th request; `state` carries the
+        algorithm-specific recurrence (TSS next size ×1024, mFAC2 counter)."""
+        if alg == 0:      # STATIC: ceil(N/P) (chunk_param handled by floor)
+            raw = _ceil_div(N, P)
+        elif alg == 1:    # SS
+            raw = jnp.asarray(1, remaining.dtype)
+        elif alg == 2:    # GSS: ceil(R/P)
+            raw = _ceil_div(remaining, P)
+        elif alg == 3:    # AutoLLVM: guided/2P with quantum
+            quantum = jnp.maximum(1, N // (P * P * 4))
+            raw = jnp.maximum(quantum, _ceil_div(remaining, 2 * P))
+        elif alg == 4:    # TSS: linear decrement, fixed-point state
+            raw = jnp.maximum(1, state // 1024)
+        elif alg == 6:    # mFAC2: batch counter in state
+            j = state // P
+
+            def batch_cs(j):
+                def body(_, carry):
+                    R, cs = carry
+                    cs = _ceil_div(R, 2 * P)
+                    return R - P * cs, cs
+                _, cs = jax.lax.fori_loop(0, j + 1, body, (N, jnp.asarray(0, N.dtype)))
+                return cs
+            raw = jnp.maximum(1, batch_cs(j))
+        else:
+            raise ValueError(f"chunk_schedule: unsupported algorithm {alg}")
+        return raw
+
+    def next_state(alg, state):
+        if alg == 4:
+            f = jnp.maximum(1.0, N.astype(jnp.float32) / (2.0 * P))
+            l = 1.0
+            A = jnp.ceil(2.0 * N.astype(jnp.float32) / (f + l))
+            delta = jnp.where(A > 1, (f - l) / (A - 1), 0.0)
+            dec = jnp.asarray(delta * 1024, state.dtype)
+            return jnp.maximum(jnp.asarray(1024, state.dtype), state - dec)
+        if alg == 6:
+            return state + 1
+        return state
+
+    if alg == 4:
+        f0 = jnp.maximum(1, _ceil_div(N, 2 * P))
+        init_state = (f0 * 1024).astype(N.dtype)
+    else:
+        init_state = jnp.asarray(0, N.dtype)
+
+    direct = alg in DIRECT_CHUNK_SET
+
+    def body(carry):
+        sizes, count, remaining, state = carry
+        raw = compute(alg, state, remaining, count)
+        if direct:
+            c = jnp.where(chunk_param > 0, chunk_param.astype(raw.dtype), raw)
+        else:
+            c = jnp.maximum(raw, jnp.maximum(1, chunk_param).astype(raw.dtype))
+        c = jnp.clip(c, 1, remaining)
+        sizes = sizes.at[count].set(c.astype(jnp.int32))
+        return sizes, count + 1, remaining - c, next_state(alg, state)
+
+    def cond(carry):
+        _, count, remaining, _ = carry
+        return (remaining > 0) & (count < max_chunks)
+
+    sizes0 = jnp.zeros((max_chunks,), jnp.int32)
+    sizes, count, remaining, _ = jax.lax.while_loop(
+        cond, body, (sizes0, jnp.asarray(0, jnp.int32), N, init_state))
+    return sizes, count

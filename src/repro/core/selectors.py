@@ -1,0 +1,235 @@
+"""Scheduling-algorithm selection methods (paper §3.2-3.5).
+
+Uniform interface so the simulator, serving dispatcher and step-plan
+autotuner can drive any of them:
+
+    sel = make_selector("QLearn", reward_type="LT", seed=0)
+    for t in range(T):
+        a = sel.select()                 # portfolio index for instance t
+        lt, lib = execute(a)             # run the loop / step / round
+        sel.observe(a, loop_time=lt, lib=lib)
+
+Expert-based:  RandomSel, ExhaustiveSel, ExpertSel   [25]
+RL-based:      QLearn, SARSA                         (this paper)
+References:    Fixed (single algorithm), Oracle (offline per-instance best)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from .agents import QLearnAgent, SarsaAgent
+from .fuzzy import make_diff_system, make_initial_system
+from .portfolio import N_ALGORITHMS
+
+SELECTOR_NAMES = ["Fixed", "RandomSel", "ExhaustiveSel", "ExpertSel",
+                  "QLearn", "SARSA", "Oracle"]
+
+
+class Selector:
+    name = "base"
+    #: number of instances the method needs before it commits to a selection
+    learning_steps = 0
+
+    def select(self) -> int:  # pragma: no cover
+        raise NotImplementedError
+
+    def observe(self, action: int, loop_time: float, lib: float) -> None:
+        pass
+
+
+class FixedSel(Selector):
+    """Always the same algorithm — used for per-algorithm campaign runs."""
+
+    name = "Fixed"
+
+    def __init__(self, algorithm: int):
+        self.algorithm = int(algorithm)
+
+    def select(self) -> int:
+        return self.algorithm
+
+
+class OracleSel(Selector):
+    """Paper §3.3: manually derived per-instance best (offline exhaustive).
+    ``best_fn(t)`` maps instance index → portfolio index."""
+
+    name = "Oracle"
+
+    def __init__(self, best_fn: Callable[[int], int]):
+        self._best = best_fn
+        self._t = 0
+
+    def select(self) -> int:
+        return int(self._best(self._t))
+
+    def observe(self, action, loop_time, lib):
+        self._t += 1
+
+
+class RandomSel(Selector):
+    """[25]: jump probability P_j = LIB / 10; if P_j > RND(0,1) pick a random
+    algorithm, else keep the current one.  LIB > 10 % → always switch."""
+
+    name = "RandomSel"
+
+    def __init__(self, seed: int = 0, initial: int = 0,
+                 n_actions: int = N_ALGORITHMS):
+        self.rng = np.random.default_rng(seed)
+        self.current = int(initial)
+        self.n_actions = n_actions
+        self._lib = 100.0  # force an exploratory jump on the first instance
+
+    def select(self) -> int:
+        if self._lib / 10.0 > self.rng.random():
+            self.current = int(self.rng.integers(0, self.n_actions))
+        return self.current
+
+    def observe(self, action, loop_time, lib):
+        self._lib = float(lib)
+
+
+class ExhaustiveSel(Selector):
+    """[25]: one instance per portfolio algorithm (in order), then argmin of
+    the recorded times.  LIB is monitored after selection; a >10 % deviation
+    from the recorded average re-triggers the search."""
+
+    name = "ExhaustiveSel"
+    learning_steps = N_ALGORITHMS
+
+    def __init__(self, lib_retrigger: float = 0.10, min_samples: int = 3,
+                 n_actions: int = N_ALGORITHMS):
+        self.n_actions = n_actions
+        self.learning_steps = n_actions
+        self._times = np.full(n_actions, np.inf)
+        self._phase = 0                 # next algorithm to try
+        self._selected: Optional[int] = None
+        self._lib_sum = 0.0
+        self._lib_cnt = 0
+        self._retrigger = lib_retrigger
+        self._min_samples = min_samples
+
+    def select(self) -> int:
+        if self._selected is None:
+            return self._phase
+        return self._selected
+
+    def observe(self, action, loop_time, lib):
+        if self._selected is None:
+            self._times[action] = loop_time
+            self._phase += 1
+            if self._phase >= self.n_actions:
+                self._selected = int(np.argmin(self._times))
+                self._lib_sum = self._lib_cnt = 0
+            return
+        # monitoring phase
+        self._lib_cnt += 1
+        self._lib_sum += lib
+        avg = self._lib_sum / self._lib_cnt
+        if (self._lib_cnt >= self._min_samples and avg > 1.0
+                and abs(lib - avg) > self._retrigger * avg):
+            # high-imbalance drift: reassess the portfolio
+            self._times[:] = np.inf
+            self._phase = 0
+            self._selected = None
+
+
+class ExpertSel(Selector):
+    """[25]: fuzzy-logic selection.  First instance runs STATIC to baseline
+    T_par and LIB; the second instance uses the *absolute* fuzzy system; later
+    instances use the *differential* system on (dT_par, dLIB) to move along
+    the portfolio's adaptivity ladder."""
+
+    name = "ExpertSel"
+    learning_steps = 1
+
+    def __init__(self):
+        self._initial = make_initial_system()
+        self._diff = make_diff_system()
+        self.current = 0            # DLS_0 = STATIC
+        self._t = 0
+        self._first_time: Optional[float] = None
+        self._prev_time: Optional[float] = None
+        self._prev_lib: Optional[float] = None
+
+    def select(self) -> int:
+        return self.current
+
+    def observe(self, action, loop_time, lib):
+        if self._t == 0:
+            self._first_time = loop_time
+            ladder = self._initial.infer(lib, 1.0)
+            self.current = int(np.clip(round(ladder), 0, N_ALGORITHMS - 1))
+        else:
+            dT = loop_time / max(self._prev_time, 1e-12) - 1.0
+            dLIB = lib - self._prev_lib
+            step = self._diff.infer(dT, dLIB)
+            self.current = int(np.clip(round(self.current + step),
+                                       0, N_ALGORITHMS - 1))
+        self._prev_time = loop_time
+        self._prev_lib = lib
+        self._t += 1
+
+
+class _RLSel(Selector):
+    agent_cls = None
+
+    def __init__(self, reward_type: str = "LT", alpha: float = 0.5,
+                 gamma: float = 0.5, alpha_decay: float = 0.05,
+                 decay_mode: str = "subtractive", initial: int = 0,
+                 n_actions: int = N_ALGORITHMS):
+        assert reward_type in ("LT", "LIB"), reward_type
+        self.reward_type = reward_type
+        self.agent = self.agent_cls(n_actions=n_actions, alpha=alpha,
+                                    gamma=gamma, alpha_decay=alpha_decay,
+                                    decay_mode=decay_mode,
+                                    initial_state=initial)
+        self.learning_steps = self.agent.learning_steps  # 144
+
+    def select(self) -> int:
+        return self.agent.select()
+
+    def observe(self, action, loop_time, lib):
+        x = loop_time if self.reward_type == "LT" else lib
+        self.agent.observe(action, x)
+
+
+class QLearnSel(_RLSel):
+    name = "QLearn"
+    agent_cls = QLearnAgent
+
+
+class SarsaSel(_RLSel):
+    name = "SARSA"
+    agent_cls = SarsaAgent
+
+
+def make_selector(name: str, **kw) -> Selector:
+    name = name.lower()
+    if name in ("fixed",):
+        return FixedSel(kw["algorithm"])
+    if name in ("randomsel", "random"):
+        return RandomSel(seed=kw.get("seed", 0),
+                         n_actions=kw.get("n_actions", N_ALGORITHMS))
+    if name in ("exhaustivesel", "exhaustive"):
+        return ExhaustiveSel(**{k: v for k, v in kw.items()
+                                if k in ("lib_retrigger", "min_samples",
+                                         "n_actions")})
+    if name in ("expertsel", "expert"):
+        return ExpertSel()
+    if name in ("qlearn", "q-learn", "q_learn"):
+        return QLearnSel(**{k: v for k, v in kw.items()
+                            if k in ("reward_type", "alpha", "gamma",
+                                     "alpha_decay", "decay_mode",
+                                     "n_actions")})
+    if name in ("sarsa",):
+        return SarsaSel(**{k: v for k, v in kw.items()
+                           if k in ("reward_type", "alpha", "gamma",
+                                    "alpha_decay", "decay_mode",
+                                    "n_actions")})
+    if name in ("oracle",):
+        return OracleSel(kw["best_fn"])
+    raise ValueError(f"unknown selector {name!r}")

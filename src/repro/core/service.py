@@ -1,0 +1,61 @@
+"""Per-loop selection registry (LB4OMP's loop-id mechanism, paper §3.1/§3.5).
+
+LB4OMP assigns a unique id to every ``schedule(runtime)`` loop so that each
+loop learns independently.  ``SelectionService`` mirrors that: callers
+register a region id (an OpenMP loop in the simulator, a jitted step in the
+autotuner, a dispatch queue in serving) and get an isolated selector.
+
+This is the init-hook analogue of ``kmp_agent_provider.cpp`` being called
+from ``kmp_dispatch.cpp`` before every loop execution.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Hashable, List, Optional, Tuple
+
+from .selectors import Selector, make_selector
+
+
+@dataclass
+class RegionRecord:
+    selector: Selector
+    history: List[Tuple[int, float, float]] = field(default_factory=list)
+    # (chosen algorithm, loop_time, lib) per instance
+
+
+class SelectionService:
+    """Multiplexes independent selectors over region ids."""
+
+    def __init__(self, method: str = "QLearn", **selector_kw):
+        self._method = method
+        self._kw = dict(selector_kw)
+        self._regions: Dict[Hashable, RegionRecord] = {}
+
+    def _record(self, region: Hashable) -> RegionRecord:
+        if region not in self._regions:
+            kw = dict(self._kw)
+            # de-correlate RandomSel streams across regions
+            if "seed" in kw:
+                kw["seed"] = hash((kw["seed"], region)) % (2 ** 31)
+            self._regions[region] = RegionRecord(
+                selector=make_selector(self._method, **kw))
+        return self._regions[region]
+
+    def begin(self, region: Hashable) -> int:
+        """Called before executing a region instance; returns the portfolio
+        index (or plan index) to use."""
+        return self._record(region).selector.select()
+
+    def end(self, region: Hashable, action: int, loop_time: float,
+            lib: float) -> None:
+        rec = self._record(region)
+        rec.selector.observe(action, loop_time, lib)
+        rec.history.append((action, loop_time, lib))
+
+    def history(self, region: Hashable):
+        return self._record(region).history
+
+    @property
+    def regions(self):
+        return list(self._regions)

@@ -1,0 +1,131 @@
+"""Step-plan autotuning — the paper's technique at TPU-step granularity (L2).
+
+The OpenMP runtime chose a *scheduling algorithm* per loop instance; a JAX
+runtime's equivalent degree of freedom is the *execution plan* of the
+repeatedly-executed jitted step: activation-checkpoint policy, microbatch
+count, attention implementation, sharding strategy, gradient compression.
+
+``StepAutoTuner`` holds a portfolio of plans, compiles them lazily, and
+drives any of the paper's selection methods (explore-first Q-Learn / SARSA
+with the Eq. 11 reward, ExhaustiveSel with its LIB re-trigger, RandomSel)
+with:
+
+    LT  reward = measured wall-clock step time
+    LIB reward = percent load imbalance over per-expert token loads (MoE) or
+                 any per-worker load vector the step reports
+
+This mirrors LB4OMP's loop registry: each region id (e.g. "train_step")
+learns independently via ``SelectionService``.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core import SelectionService, percent_load_imbalance
+from ..configs.base import ModelConfig
+from ..optim.adamw import AdamWConfig
+
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    name: str
+    microbatches: int = 1
+    remat: bool = True
+    attn_impl: str = "auto"
+    fsdp: bool = True
+    compress: Optional[str] = None     # None | "int8" | "topk"
+
+
+DEFAULT_PLANS: Tuple[ExecutionPlan, ...] = (
+    ExecutionPlan("mb1_remat", microbatches=1, remat=True),
+    ExecutionPlan("mb2_remat", microbatches=2, remat=True),
+    ExecutionPlan("mb4_remat", microbatches=4, remat=True),
+    ExecutionPlan("mb1_noremat", microbatches=1, remat=False),
+    ExecutionPlan("mb2_noremat", microbatches=2, remat=False),
+)
+
+
+class StepAutoTuner:
+    """Online selection over compiled step variants.
+
+    build_fn(plan) -> step callable (already jitted or jit-able); the tuner
+    compiles on first use and charges compile time to the exploration phase
+    only in wall-clock terms (recorded separately)."""
+
+    def __init__(self, plans: List[ExecutionPlan], build_fn,
+                 method: str = "ExhaustiveSel", reward: str = "LT",
+                 seed: int = 0, region: str = "train_step"):
+        self.plans = list(plans)
+        self.build_fn = build_fn
+        self.region = region
+        self.service = SelectionService(method, reward_type=reward,
+                                        seed=seed,
+                                        n_actions=len(self.plans)) \
+            if method.lower() in ("qlearn", "sarsa") else \
+            SelectionService(method, seed=seed, n_actions=len(self.plans))
+        self._compiled: Dict[int, Callable] = {}
+        self.compile_times: Dict[int, float] = {}
+        self.history: List[Tuple[str, float, float]] = []
+
+    def _get(self, idx: int) -> Callable:
+        if idx not in self._compiled:
+            t0 = time.perf_counter()
+            self._compiled[idx] = self.build_fn(self.plans[idx])
+            self.compile_times[idx] = time.perf_counter() - t0
+        return self._compiled[idx]
+
+    def step(self, *args):
+        """Run one training step with the currently-selected plan.
+        Returns (outputs, plan_name, step_time)."""
+        idx = self.service.begin(self.region)
+        fn = self._get(idx)
+        t0 = time.perf_counter()
+        out = fn(*args)
+        out = jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        lib = self._lib_signal(out)
+        self.service.end(self.region, idx, dt, lib)
+        self.history.append((self.plans[idx].name, dt, lib))
+        return out, self.plans[idx].name, dt
+
+    @staticmethod
+    def _lib_signal(out) -> float:
+        """Paper Eq. 8 over per-worker loads when the step reports them
+        (MoE expert loads; per-replica times)."""
+        if isinstance(out, tuple) and len(out) == 3 and isinstance(out[2], dict):
+            metrics = out[2]
+            if "expert_load" in metrics:
+                load = np.asarray(metrics["expert_load"], dtype=np.float64)
+                load = load.sum(axis=0) if load.ndim > 1 else load
+                if load.max() > 0:
+                    return percent_load_imbalance(load)
+        return 0.0
+
+    @property
+    def selected_plan(self) -> str:
+        return self.plans[self.service.begin(self.region)].name
+
+
+def make_plan_builder(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                      jit_kwargs: Optional[dict] = None):
+    """Standard builder: plan -> jitted train step."""
+    import dataclasses as _dc
+
+    from ..launch.steps import make_train_step
+    from .compression import EFCompressor
+
+    def build(plan: ExecutionPlan):
+        c = _dc.replace(cfg, remat=plan.remat)
+        comp = EFCompressor(plan.compress) if plan.compress else None
+        step = make_train_step(c, opt_cfg, attn_impl=plan.attn_impl,
+                               microbatches=plan.microbatches,
+                               compressor=comp)
+        return jax.jit(step, **(jit_kwargs or {}))
+
+    return build

@@ -1,0 +1,83 @@
+"""Activation-sharding context: Megatron-SP-style boundary constraints.
+
+When active, layer-scan boundary activations (B, S, D) are constrained to
+P(dp, tp, None) — sequence sharded over the model axis between blocks — so
+the remat-stored residuals divide by the full mesh instead of only the data
+axes (qwen2-vl train_4k: 85 GB/device -> 5.3 GB/device).
+
+The models call ``constrain_boundary`` unconditionally; it is a no-op unless
+a context is installed (smoke tests on one CPU device stay constraint-free).
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE: dict = {"dp": None, "tp": None, "tp_size": 1, "dp_size": 1,
+                "attn_bf16": False, "attn_remat": False, "moe_groups": 1}
+
+
+@contextmanager
+def activation_sharding(dp, tp: Optional[str], dp_size: int, tp_size: int,
+                        attn_bf16: bool = False, attn_remat: bool = False,
+                        moe_groups: int = 1):
+    prev = dict(_STATE)
+    _STATE.update(dp=dp, tp=tp, dp_size=dp_size, tp_size=tp_size,
+                  attn_bf16=attn_bf16, attn_remat=attn_remat,
+                  moe_groups=moe_groups)
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def attn_bf16() -> bool:
+    return _STATE["attn_bf16"]
+
+
+def attn_remat() -> bool:
+    return _STATE["attn_remat"]
+
+
+def moe_groups() -> int:
+    return _STATE["moe_groups"]
+
+
+def constrain_expert_weights(w, kind: str):
+    """§Perf B2: force FSDP expert weights to be ALL-GATHERED (D replicated)
+    before the expert einsums — otherwise GSPMD psums the (E, C, F)
+    activations over the data axes (16 TB/step on grok-1-314b).
+    kind: "up" for (..., E, D, F), "down" for (..., E, F, D)."""
+    tp = _STATE["tp"]
+    if tp is None or _STATE["dp"] is None:
+        return w
+    pad = [None] * (w.ndim - 2)
+    spec = P(*pad, None, tp) if kind == "up" else P(*pad, tp, None)
+    return jax.lax.with_sharding_constraint(w, spec)
+
+
+def constrain_tokens_grouped(xg):
+    """MoE grouped dispatch (G, T_local, D): G over the data axes."""
+    dp = _STATE["dp"]
+    if dp is None or xg.ndim != 3 or xg.shape[0] % _STATE["dp_size"] != 0:
+        return xg
+    return jax.lax.with_sharding_constraint(xg, P(dp, None, None))
+
+
+def constrain_boundary(x):
+    """x: (B, S, D) hidden states at a block boundary."""
+    tp = _STATE["tp"]
+    if tp is None or x.ndim != 3:
+        return x
+    B, S, D = x.shape
+    dp = _STATE["dp"]
+    spec_b = dp if (dp and B % _STATE["dp_size"] == 0) else None
+    spec_s = tp if S % _STATE["tp_size"] == 0 and S >= _STATE["tp_size"] \
+        else None
+    if spec_b is None and spec_s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(spec_b, spec_s, None))

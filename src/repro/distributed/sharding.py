@@ -1,0 +1,160 @@
+"""Sharding rules: parameter / optimizer / activation / cache partition specs.
+
+Strategy (the production layout; plan variants in ``autotune``):
+
+* TP over the ``model`` axis: attention heads, FFN hidden, vocab.
+* FSDP (ZeRO-3-style weight sharding) over the data axes for the *other*
+  matrix dimension — this is what lets grok-1-314b's 314e9 params fit
+  (params + Adam moments sharded over all 256/512 chips).
+* Batch over (``pod``, ``data``); KV caches shard their *sequence* axis over
+  ``model`` (works for any n_kv_heads, keeps the 1.1-TB 32k x 128 cache
+  distributed; the decode softmax gathers only the tiny score vector).
+* SSM decode state shards heads over ``model``.
+
+The spec builder walks the parameter tree by name, so it works for every
+family without per-arch tables.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+
+def data_axes(mesh: Mesh):
+    """The composed batch axes: ('pod','data') on multi-pod meshes."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    n = 1
+    for a in entry:
+        n *= mesh.shape[a]
+    return n
+
+
+def fit_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharding on axes whose size doesn't divide the mesh extent —
+    odd vocabularies (whisper's 51865), batch=1 decode, 12-head models.
+    Tuple entries are reduced one axis at a time before giving up."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        while entry is not None and dim % _axis_size(mesh, entry) != 0:
+            if isinstance(entry, tuple) and len(entry) > 1:
+                entry = entry[1:] if len(entry) > 2 else entry[1]
+            else:
+                entry = None
+        out.append(entry)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _spec_for(name: str, ndim: int, dp, tp, fsdp: bool) -> P:
+    """Partition spec by parameter name.  Leading layer-stack dims (ndim
+    larger than the logical rank) are never sharded."""
+    d = dp if fsdp else None
+
+    def lift(*tail):
+        """Pad with None for layer-stack leading dims."""
+        pad = ndim - len(tail)
+        return P(*([None] * pad + list(tail)))
+
+    if name in ("embed",):
+        return P(tp, d)
+    if name in ("lm_head",):
+        return P(d, tp)
+    if name in ("wq", "wk", "wv", "xwq", "xwk", "xwv", "w_gate", "w_up",
+                "w1", "in_proj"):
+        return lift(d, tp)
+    if name in ("wo", "xwo", "w_down", "w2", "out_proj"):
+        return lift(tp, d)
+    if name in ("router",):
+        return lift(d, None)
+    if name in ("we_gate", "we_up"):
+        return lift(None, d, tp)      # (L, E, D, F)
+    if name in ("we_down",):
+        return lift(None, tp, d)      # (L, E, F, D)
+    if name in ("b1",):
+        return lift(tp)
+    if name in ("conv_w",):
+        return lift(None, tp)         # (L, k, channels)
+    if name in ("gate_norm",):
+        return lift(tp)
+    # norms, biases, A_log, D, dt_bias, scalars: replicate
+    return P()
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape,
+                fsdp: bool = True) -> Dict:
+    """PartitionSpec pytree matching ``params_shape`` (an eval_shape tree)."""
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tp = "model" if "model" in mesh.axis_names else None
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        name = path[-1]
+        spec = _spec_for(name, len(tree.shape), dp, tp, fsdp)
+        return fit_spec(spec, tree.shape, mesh)
+
+    return walk(params_shape)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh) -> Dict:
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    out = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.frontend == "audio":
+        out["embeds"] = P(dp, None, None)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shape) -> Dict:
+    """KV caches: sequence over `model`; batch over data axes.
+    SSM states: heads over `model`."""
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tp = "model" if "model" in mesh.axis_names else None
+    out: Dict = {}
+    for k, leaf in cache_shape.items():
+        if k == "len":
+            out[k] = P()
+        elif k in ("k", "v", "xk", "xv"):
+            # (L, B, S, K, hd): shard S over model, B over data
+            out[k] = fit_spec(P(None, dp, tp, None, None), leaf.shape, mesh)
+        elif k == "conv":
+            # (L, B, k-1, ch): channels over model
+            out[k] = fit_spec(P(None, dp, None, tp), leaf.shape, mesh)
+        elif k == "state":
+            # (L, B, nh, hp, st): heads over model
+            out[k] = fit_spec(P(None, dp, tp, None, None), leaf.shape, mesh)
+        else:
+            out[k] = P()
+    return out
+
+
+def opt_specs(param_spec_tree) -> Dict:
+    """Adam moments inherit the parameter sharding (ZeRO: fully sharded)."""
+    from ..optim.adamw import AdamWState
+    return AdamWState(step=P(),
+                      m=jax.tree.map(lambda s: s, param_spec_tree),
+                      v=jax.tree.map(lambda s: s, param_spec_tree))
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,136 @@
+"""Flash attention — Pallas TPU kernel with explicit VMEM BlockSpec tiling.
+
+Design (TPU-native, not a CUDA port):
+
+* grid = (batch*q_heads, n_q_blocks, n_kv_blocks); the innermost grid axis is
+  sequential on TPU, so the online-softmax running state (m, l, acc) lives in
+  VMEM scratch that persists across kv blocks.
+* q tile (BLOCK_Q, hd) stays resident; k/v tiles (BLOCK_KV, hd) stream
+  through VMEM; all matmul shapes are multiples of 128 on the contracting
+  dims for MXU alignment (hd = 64/112/128 padded to 128 by the wrapper).
+* GQA is handled by the k/v index_map (q head h reads kv head h // G).
+
+Validated on CPU in interpret mode against ``ref.flash_attention_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_KV = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_kv: int,
+                  seq_kv: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = kj * block_kv
+
+    if causal:
+        # skip blocks entirely above the diagonal
+        run = k_start <= q_start + block_q - 1
+    else:
+        run = kj >= 0
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[...].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[...].astype(jnp.float32)                  # (bkv, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bkv)
+        kpos = k_start + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = kpos < seq_kv
+        if causal:
+            qpos = q_start + lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            valid = valid & (kpos <= qpos)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_scr[...]                                 # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + p.sum(-1, keepdims=True)
+        v = v_ref[...].astype(jnp.float32)                  # (bkv, hd)
+        acc_scr[...] = (acc_scr[...] * alpha
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_scr[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finish():
+        o_ref[...] = (acc_scr[...] /
+                      jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_kv: int = DEFAULT_BLOCK_KV,
+                    interpret: bool = False):
+    """q: (B, S, H, hd); k, v: (B, T, K, hd) with H % K == 0.
+    Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, T)
+    n_q = -(-S // block_q)
+    n_kv = -(-T // block_kv)
+    Sp, Tp = n_q * block_q, n_kv * block_kv
+
+    # (B*H, S, hd) layout; pad S/T to block multiples
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * H, S, hd)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * K, T, hd)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * K, T, hd)
+    if Sp != S:
+        qh = jnp.pad(qh, ((0, 0), (0, Sp - S), (0, 0)))
+    if Tp != T:
+        kh = jnp.pad(kh, ((0, 0), (0, Tp - T), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, Tp - T), (0, 0)))
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               block_q=block_q, block_kv=block_kv, seq_kv=T)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((None, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_kv, hd),
+                         lambda b, i, j, G=G, K=K: ((b // (G * K)) * K + (b // G) % K, j, 0)),
+            pl.BlockSpec((None, block_kv, hd),
+                         lambda b, i, j, G=G, K=K: ((b // (G * K)) * K + (b // G) % K, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+
+    out = out[:, :S].reshape(B, H, S, hd)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,34 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python with real block indexing, which is what the per-kernel
+allclose tests validate.  On TPU backends the same calls compile via Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention as _flash
+from .rmsnorm import rmsnorm as _rmsnorm
+from .ssd_scan import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_kv: int = 512):
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_kv=block_kv,
+                  interpret=_interpret())
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, head_block: int = 8):
+    return _ssd(x, dt, A, B, C, chunk=chunk, head_block=head_block,
+                interpret=_interpret())
+
+
+def rmsnorm(x, w, *, eps: float = 1e-5, block_rows: int = 256):
+    return _rmsnorm(x, w, eps=eps, block_rows=block_rows,
+                    interpret=_interpret())

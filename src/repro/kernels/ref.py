@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B,S,H,hd); k,v: (B,T,K,hd). Materializes full scores (oracle)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q.astype(jnp.float32) * scale).reshape(B, S, K, G, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", w, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, *, chunk: int = 0):
+    """Sequential state-space recurrence (exact oracle, O(S) scan).
+
+    x: (b,S,nh,hp); dt: (b,S,nh); A: (nh,); B,C: (b,S,st).
+    Returns (y, final_state)."""
+    b, S, nh, hp = x.shape
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp        # (b,nh,hp), (b,nh), (b,st), (b,st)
+        dA = jnp.exp(dt_t * A[None, :])
+        inc = jnp.einsum("bhp,bs,bh->bhps", x_t, B_t, dt_t)
+        h = h * dA[..., None, None] + inc
+        y_t = jnp.einsum("bhps,bs->bhp", h, C_t)
+        return h, y_t
+
+    h0 = jnp.zeros((b, nh, hp, A.shape[0] and B.shape[-1]), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_last
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, extract memory / FLOPs / collective-bytes for the
+roofline analysis (EXPERIMENTS.md §Dry-run / §Roofline).
+
+MUST be run as its own process (the XLA_FLAGS line above executes before any
+other jax import — 512 placeholder host devices).  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+        --shape train_4k --mesh single            # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out results/dryrun.json                 # everything (slow)
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_NAMES, SHAPES, applicable, get_config
+from ..distributed.ctx import activation_sharding
+from ..distributed.sharding import (batch_specs, cache_specs, data_axes,
+                                    fit_spec, named, opt_specs, param_specs)
+from ..optim.adamw import AdamWConfig
+from .hlo_analysis import analyze_hlo
+from .mesh import make_production_mesh
+from .steps import (input_specs, make_prefill_step, make_serve_step,
+                    make_train_step, opt_shape, params_shape)
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+# per-cell tuned plans from the §Perf hillclimb (EXPERIMENTS.md): grouped MoE
+# dispatch pays off for olmoe's 64-expert layers (peak -71%, bytes -13%) but
+# regressed grok's 8-expert ones — tuned per arch, like the paper's per-loop
+# selection.
+TUNED_PLANS = {
+    ("olmoe-1b-7b", "train_4k"): {"moe_groups": 16},
+    ("olmoe-1b-7b", "prefill_32k"): {"moe_groups": 16},
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             fsdp: bool = True, microbatches: int = 1,
+             attn_impl: str = "auto", attn_bf16: bool = False,
+             attn_remat: bool = True, moe_groups: int = 1) -> Dict:
+    for k, v in TUNED_PLANS.get((arch, shape_name), {}).items():
+        if k == "moe_groups" and moe_groups == 1:
+            moe_groups = v
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    res: Dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        res["skipped"] = why
+        return res
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    pshape = params_shape(cfg)
+    pspec = param_specs(cfg, mesh, pshape, fsdp=fsdp)
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tp_size = mesh.shape.get("model", 1)
+
+    with mesh, activation_sharding(dp, "model", dp_size, tp_size,
+                                   attn_bf16=attn_bf16,
+                                   attn_remat=attn_remat,
+                                   moe_groups=moe_groups):
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig(moment_dtype=cfg.moment_dtype)
+            oshape = opt_shape(cfg, opt_cfg)
+            ospec = opt_specs(pspec)
+            bspec = batch_specs(cfg, mesh)
+            step = make_train_step(cfg, opt_cfg, attn_impl=attn_impl,
+                                   microbatches=microbatches)
+            jitted = jax.jit(
+                step,
+                in_shardings=(named(mesh, pspec), named(mesh, ospec),
+                              named(mesh, bspec)),
+                out_shardings=(named(mesh, pspec), named(mesh, ospec), None),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(pshape, oshape, input_specs(cfg, shape))
+        elif shape.kind == "prefill":
+            bspec = {k: v for k, v in batch_specs(cfg, mesh).items()
+                     if k != "labels"}
+            step = make_prefill_step(cfg, attn_impl=attn_impl)
+            ispec = input_specs(cfg, shape)
+            cshape = jax.eval_shape(step, pshape, ispec)[1]
+            cspec = cache_specs(cfg, mesh, cshape)
+            lg_spec = fit_spec(P(dp, "model"),
+                               (shape.global_batch, cfg.vocab_size), mesh)
+            out_sh = (NamedSharding(mesh, lg_spec), named(mesh, cspec))
+            jitted = jax.jit(step,
+                             in_shardings=(named(mesh, pspec),
+                                           named(mesh, bspec)),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(pshape, ispec)
+        else:  # decode
+            ispec = input_specs(cfg, shape)
+            cspec = cache_specs(cfg, mesh, ispec["cache"])
+            tok_spec = fit_spec(P(dp), (shape.global_batch,), mesh)
+            logits_spec = fit_spec(
+                P(tok_spec[0] if len(tok_spec) else None, "model"),
+                (shape.global_batch, cfg.vocab_size), mesh)
+            step = make_serve_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(named(mesh, pspec), named(mesh, cspec),
+                              NamedSharding(mesh, tok_spec)),
+                out_shardings=(NamedSharding(mesh, logits_spec),
+                               named(mesh, cspec)),
+                donate_argnums=(1,))
+            lowered = jitted.lower(pshape, ispec["cache"], ispec["token"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    costs = analyze_hlo(hlo, n_dev)
+    coll = costs.coll
+
+    res.update({
+        "devices": n_dev,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": costs.flops,
+        "bytes_per_device": costs.bytes,
+        "xla_flops_once": float(cost.get("flops", -1.0)),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+            + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+        },
+        "bytes_by_category": costs.bytes_by,
+        "collective_wire_bytes_per_device": coll,
+        "collective_total": sum(coll.values()),
+        "n_params": cfg.n_params(),
+        "active_params": cfg.active_params(),
+    })
+    return res
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--attn", default="auto")
+    ap.add_argument("--attn-bf16", action="store_true")
+    ap.add_argument("--attn-remat", dest="attn_remat", action="store_true",
+                    default=True)
+    ap.add_argument("--no-attn-remat", dest="attn_remat",
+                    action="store_false")
+    ap.add_argument("--moe-groups", type=int, default=1)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cells: List[Tuple[str, str]] = []
+    if args.all:
+        cells = [(a, s) for a in ARCH_NAMES for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                r = run_cell(arch, shape, mp, fsdp=not args.no_fsdp,
+                             microbatches=args.microbatches,
+                             attn_impl=args.attn, attn_bf16=args.attn_bf16,
+                             attn_remat=args.attn_remat,
+                             moe_groups=args.moe_groups)
+            except Exception as e:  # a failing cell is a bug — surface it
+                r = {"arch": arch, "shape": shape,
+                     "mesh": "2x16x16" if mp else "16x16",
+                     "error": f"{type(e).__name__}: {e}"}
+            results.append(r)
+            print(json.dumps(r), flush=True)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+    if any("error" in r for r in results):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

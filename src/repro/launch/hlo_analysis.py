@@ -1,0 +1,300 @@
+"""While-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` (XLA's HloCostAnalysis) visits every instruction
+ONCE — a ``lax.scan`` over 64 layers contributes a single layer of FLOPs.
+For scanned-layer models that undercounts by ~n_layers, making any roofline
+derived from it garbage.  This module re-derives FLOPs / bytes / collective
+wire-bytes from the post-SPMD HLO text, multiplying while-loop bodies by
+their trip counts (XLA annotates ``backend_config={"known_trip_count"...}``)
+and recursing through calls, conditionals and fusions.
+
+Accounting (per-device; post-SPMD shapes are already per-device):
+
+* FLOPs: ``dot`` = 2 * numel(result) * prod(lhs contracting dims);
+  elementwise/reduce = numel(result) (secondary but counted); fusion bodies
+  contribute their internal dot/elementwise FLOPs.
+* Bytes: result + operand bytes per instruction (HloCostAnalysis's own
+  approximation); fusions count only their boundary operands/result;
+  dynamic-slice / dynamic-update-slice count the slice, not the buffer.
+* Collectives: per-device ring wire-bytes (see ``collective_wire``).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota"}
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
+_OP_RE = re.compile(r"([a-z][\w\-]*)\(")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, shape in _parse_shapes(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _numel(type_str: str) -> int:
+    total = 0
+    for _, shape in _parse_shapes(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+_BYTE_CATS = ("dot", "elementwise", "dus", "data_movement", "collective",
+              "other")
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLL_KINDS})
+    bytes_by: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in _BYTE_CATS})
+
+    def add_bytes(self, cat: str, n: float):
+        self.bytes += n
+        self.bytes_by[cat] += n
+
+    def __iadd__(self, other: "Costs"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k in COLL_KINDS:
+            self.coll[k] += other.coll[k]
+        for k in _BYTE_CATS:
+            self.bytes_by[k] += other.bytes_by[k]
+        return self
+
+    def scaled(self, f: float) -> "Costs":
+        return Costs(self.flops * f, self.bytes * f,
+                     {k: v * f for k, v in self.coll.items()},
+                     {k: v * f for k, v in self.bytes_by.items()})
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+@dataclass
+class Instr:
+    name: str
+    rtype: str
+    op: str
+    args: str
+    line: str
+
+
+class HloAnalyzer:
+    def __init__(self, hlo: str, total_devices: int):
+        self.total_devices = total_devices
+        self.comps: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        cur = None
+        for line in hlo.splitlines():
+            mh = _HDR_RE.match(line)
+            if mh:
+                cur = mh.group(2)
+                self.comps[cur] = []
+                if mh.group(1):
+                    self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            mn = _NAME_RE.match(line)
+            if not mn:
+                continue
+            rest = line[mn.end():]
+            mo = _OP_RE.search(rest)
+            if not mo:
+                continue
+            self.comps[cur].append(Instr(
+                name=mn.group(1),
+                rtype=rest[:mo.start()],
+                op=mo.group(1),
+                args=rest[mo.end():],
+                line=line,
+            ))
+        self._shape_cache: Dict[str, Dict[str, str]] = {}
+        self._cost_cache: Dict[str, Costs] = {}
+
+    # -- helpers -------------------------------------------------------------
+    def _shapes(self, comp: str) -> Dict[str, str]:
+        if comp not in self._shape_cache:
+            self._shape_cache[comp] = {i.name: i.rtype
+                                       for i in self.comps.get(comp, [])}
+        return self._shape_cache[comp]
+
+    def _operands(self, args: str) -> List[str]:
+        head = args.split(")", 1)[0]
+        return re.findall(r"%([\w\.\-]+)", head)
+
+    def _operand_bytes(self, comp: str, args: str) -> int:
+        shapes = self._shapes(comp)
+        return sum(_bytes_of(shapes[o]) for o in self._operands(args)
+                   if o in shapes)
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        flops = 2.0 * _numel(ins.rtype)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+        ops = self._operands(ins.args)
+        k = 1
+        if m and ops:
+            lt = self._shapes(comp).get(ops[0])
+            if lt:
+                parsed = _parse_shapes(lt)
+                if parsed:
+                    _, lshape = parsed[0]
+                    for idx in (m.group(1).split(",") if m.group(1) else []):
+                        i = int(idx)
+                        if i < len(lshape):
+                            k *= lshape[i]
+        return flops * k
+
+    def _group_size(self, line: str) -> int:
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+        if m:
+            return int(m.group(2))
+        m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+        if m:
+            return len(m.group(1).split(","))
+        return self.total_devices
+
+    # -- main ----------------------------------------------------------------
+    def cost(self, comp: Optional[str] = None,
+             stack: Tuple[str, ...] = ()) -> Costs:
+        comp = comp or self.entry
+        if comp is None:
+            return Costs()
+        if comp in self._cost_cache:
+            return self._cost_cache[comp]
+        if comp in stack:
+            return Costs()
+        total = Costs()
+        for ins in self.comps.get(comp, []):
+            op = ins.op
+            if op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                if mb:
+                    mt = _TRIP_RE.search(ins.line)
+                    trips = int(mt.group(1)) if mt else self._cond_trips(ins)
+                    total += self.cost(mb.group(1),
+                                       stack + (comp,)).scaled(trips)
+                continue
+            if op in ("call", "conditional", "custom-call", "async-start"):
+                for mt in re.finditer(
+                        r"(?:to_apply=|calls=|branch_computations=\{)"
+                        r"%?([\w\.\-]+)", ins.line):
+                    total += self.cost(mt.group(1), stack + (comp,))
+                continue
+            if op == "fusion":
+                total.add_bytes("data_movement",
+                                _bytes_of(ins.rtype)
+                                + self._operand_bytes(comp, ins.args))
+                mf = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                if mf:
+                    total.flops += self.cost(mf.group(1),
+                                             stack + (comp,)).flops
+                continue
+            handled = False
+            for kind in COLL_KINDS:
+                if op.startswith(kind) and not op.endswith("-done"):
+                    size = _bytes_of(ins.rtype)
+                    G = max(2, self._group_size(ins.line))
+                    total.coll[kind] += collective_wire(kind, size, G)
+                    total.add_bytes("collective", size)
+                    handled = True
+                    break
+            if handled or op in _SKIP_OPS:
+                continue
+            if op == "dynamic-slice":
+                total.add_bytes("dus", 2 * _bytes_of(ins.rtype))
+                continue
+            if op == "dynamic-update-slice":
+                ops = self._operands(ins.args)
+                upd = self._shapes(comp).get(ops[1]) if len(ops) > 1 else None
+                total.add_bytes("dus", 2 * _bytes_of(upd) if upd
+                                else _bytes_of(ins.rtype) // 4)
+                continue
+            if op in ("copy", "copy-start", "transpose", "reshape",
+                      "concatenate", "broadcast", "slice", "pad", "reverse",
+                      "gather", "scatter", "select-and-scatter", "sort"):
+                total.add_bytes("data_movement", 2 * _bytes_of(ins.rtype))
+                continue
+            if op in ("dot", "convolution"):
+                total.add_bytes("dot", _bytes_of(ins.rtype)
+                                + self._operand_bytes(comp, ins.args))
+                total.flops += self._dot_flops(comp, ins)
+                continue
+            if op in ("reduce", "reduce-window"):
+                total.add_bytes("other", _bytes_of(ins.rtype)
+                                + self._operand_bytes(comp, ins.args))
+                total.flops += _numel(ins.rtype)
+                continue
+            # elementwise-ish: write-once/read-once (fusion-equivalent)
+            total.add_bytes("elementwise", 2 * _bytes_of(ins.rtype))
+            total.flops += _numel(ins.rtype)
+        self._cost_cache[comp] = total
+        return total
+
+    def _cond_trips(self, ins: Instr) -> int:
+        mc = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+        best = 1
+        if mc:
+            for i in self.comps.get(mc.group(1), []):
+                for m in re.finditer(r"constant\((\d+)\)", i.line):
+                    best = max(best, int(m.group(1)))
+        return best
+
+
+def collective_wire(kind: str, result_bytes: float, G: int) -> float:
+    """Per-device wire bytes for a ring implementation."""
+    if kind == "all-gather":
+        return (G - 1) / G * result_bytes
+    if kind == "all-reduce":
+        return 2 * (G - 1) / G * result_bytes
+    if kind == "reduce-scatter":
+        return (G - 1) * result_bytes
+    if kind == "all-to-all":
+        return (G - 1) / G * result_bytes
+    return float(result_bytes)
+
+
+def analyze_hlo(hlo: str, total_devices: int) -> Costs:
+    return HloAnalyzer(hlo, total_devices).cost()

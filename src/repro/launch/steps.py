@@ -1,0 +1,120 @@
+"""Step builders shared by the trainer, the serving engine and the dry-run:
+``make_train_step`` (fwd + bwd + AdamW, optional microbatched gradient
+accumulation and gradient compression) and ``make_serve_step`` /
+``make_prefill_step``.  ``input_specs`` produces ShapeDtypeStruct stand-ins
+for every (arch x shape) cell — weak-type-correct, shardable, no device
+allocation.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig, SHAPES
+from ..models.decode import decode_cache_specs, decode_step
+from ..models.model import forward, init_params, loss_fn, logits_fn
+from ..models.decode import prefill
+from ..optim.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    attn_impl: str = "auto", microbatches: int = 1,
+                    compressor=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    microbatches > 1 accumulates gradients over sequential microbatch slices
+    (lets XLA overlap the reduce-scatter of one slice with the compute of the
+    next); ``compressor`` optionally compresses gradients before the update
+    (see distributed.compression)."""
+
+    def lf(p, b):
+        return loss_fn(cfg, p, b, attn_impl=attn_impl)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if microbatches == 1:
+            (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(params,
+                                                                      batch)
+        else:
+            def split(x):
+                B = x.shape[0]
+                assert B % microbatches == 0, (B, microbatches)
+                return x.reshape((microbatches, B // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_step(carry, b):
+                g_acc, l_acc = carry
+                (l, _aux), g = jax.value_and_grad(lf, has_aux=True)(params, b)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), _ = jax.lax.scan(acc_step, (g0, jnp.float32(0)),
+                                            mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            aux = {}
+        if compressor is not None:
+            grads = compressor(grads)
+        new_params, new_opt, metrics = adamw_update(grads, opt_state, params,
+                                                    opt_cfg)
+        metrics = {"loss": loss, **metrics}
+        if "expert_load" in aux:
+            metrics["expert_load"] = aux["expert_load"]
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token):
+        return decode_step(cfg, params, cache, token)
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, attn_impl: str = "auto"):
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch["tokens"],
+                       embeds=batch.get("embeds"), attn_impl=attn_impl)
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins
+# ---------------------------------------------------------------------------
+
+def params_shape(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def opt_shape(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    ps = params_shape(cfg)
+    return jax.eval_shape(lambda p: adamw_init(p, opt_cfg), ps)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Model inputs for one dry-run cell (no device allocation)."""
+    sds = jax.ShapeDtypeStruct
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": sds((B, S), jnp.int32),
+               "labels": sds((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            out["embeds"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                                jnp.dtype(cfg.param_dtype))
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            out["embeds"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                                jnp.dtype(cfg.param_dtype))
+        return out
+    if shape.kind == "decode":
+        return {"token": sds((B,), jnp.int32),
+                "cache": decode_cache_specs(cfg, B, S)}
+    raise ValueError(shape.kind)

@@ -1,0 +1,67 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+        --steps 100 [--smoke] [--method QLearn] [--ckpt DIR]
+
+``--smoke`` (default on CPU-sized hosts) trains the reduced same-family
+config; without it, the full assigned config is used (pod-scale hardware).
+The step-plan autotuner (the paper's selection technique, L2) picks the
+execution plan online; checkpoints are atomic + async; injected failures
+exercise the restart path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from ..configs import ARCH_NAMES, get_config, smoke_reduce
+from ..data import DataConfig
+from ..distributed import DEFAULT_PLANS, StepAutoTuner, make_plan_builder
+from ..optim.adamw import AdamWConfig
+from ..runtime import Trainer, TrainerConfig
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="llama3.2-3b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--method", default="ExhaustiveSel")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--failure-rate", type=float, default=0.0)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_reduce(cfg)
+    print(f"arch={args.arch} family={cfg.family} "
+          f"params={cfg.n_params() / 1e6:.1f}M smoke={args.smoke}")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                          total_steps=args.steps,
+                          moment_dtype=cfg.moment_dtype)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                          global_batch=args.batch)
+    tuner = StepAutoTuner(list(DEFAULT_PLANS),
+                          make_plan_builder(cfg, opt_cfg),
+                          method=args.method)
+    trainer = Trainer(cfg, opt_cfg, data_cfg,
+                      TrainerConfig(ckpt_dir=args.ckpt,
+                                    ckpt_every=max(10, args.steps // 5),
+                                    failure_rate=args.failure_rate),
+                      autotuner=tuner)
+    trainer.install_preemption_handler()
+    out = trainer.train(args.steps)
+    losses = out["losses"]
+    print(f"done: steps={out['final_step']} restarts={out['restarts']} "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"plan={tuner.selected_plan}")
+
+
+if __name__ == "__main__":
+    main()

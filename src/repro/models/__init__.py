@@ -1,0 +1,10 @@
+"""repro.models — the architecture zoo (dense / MoE / SSM / hybrid / enc-dec)."""
+
+from .model import (init_params, forward, loss_fn, logits_fn,
+                    chunked_ce_loss)
+from .decode import (decode_step, prefill, init_decode_cache,
+                     decode_cache_specs)
+
+__all__ = ["init_params", "forward", "loss_fn", "logits_fn",
+           "chunked_ce_loss", "decode_step", "prefill", "init_decode_cache",
+           "decode_cache_specs"]

@@ -1,0 +1,216 @@
+"""Serving paths: cache init, prefill, and single-token decode for every
+architecture family.
+
+Cache layouts (leading L = layer-stacked so decode scans over layers):
+
+    dense/moe : {"k": (L,B,Smax,K,hd), "v": ..., "len": i32[]}
+    ssm       : {"conv": (L,B,k-1,ch), "state": (L,B,nh,hp,st), "len": i32[]}
+    hybrid    : ssm caches + shared-attn KV per segment (n_seg leading)
+    encdec    : decoder self-attn KV + precomputed cross KV over encoder_seq
+
+``decode_step(cfg, params, cache, token)`` is the unit the serving engine
+and the ``decode_*`` dry-run shapes lower.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from .layers import layer_norm, rms_norm
+from .model import (_dense_block, _dtype, _encdec_forward, _moe_block_apply,
+                    _sinusoid, forward, logits_fn)
+from .ssm import ssm_layer_apply
+
+
+def _kv_shape(cfg: ModelConfig, B: int, S: int):
+    return (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=None) -> Dict:
+    """Concrete zero-filled cache (smoke tests / serving)."""
+    specs = decode_cache_specs(cfg, batch, max_len, dtype)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+
+def decode_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                       dtype=None) -> Dict:
+    """ShapeDtypeStruct cache pytree (dry-run input_specs)."""
+    dt = dtype or _dtype(cfg)
+    sds = jax.ShapeDtypeStruct
+    L, B = cfg.n_layers, batch
+    out: Dict = {"len": sds((), jnp.int32)}
+    if cfg.family in ("dense", "moe"):
+        out["k"] = sds(_kv_shape(cfg, B, max_len), dt)
+        out["v"] = sds(_kv_shape(cfg, B, max_len), dt)
+    elif cfg.family == "ssm":
+        ch = cfg.d_inner + 2 * cfg.ssm_state
+        out["conv"] = sds((L, B, cfg.ssm_conv - 1, ch), dt)
+        out["state"] = sds((L, B, cfg.ssm_nheads, cfg.ssm_headdim,
+                            cfg.ssm_state), jnp.float32)
+    elif cfg.family == "hybrid":
+        n_seg = cfg.n_layers // cfg.attn_every
+        ch = cfg.d_inner + 2 * cfg.ssm_state
+        out["conv"] = sds((L, B, cfg.ssm_conv - 1, ch), dt)
+        out["state"] = sds((L, B, cfg.ssm_nheads, cfg.ssm_headdim,
+                            cfg.ssm_state), jnp.float32)
+        out["k"] = sds((n_seg, B, max_len, cfg.n_kv_heads, cfg.head_dim), dt)
+        out["v"] = sds((n_seg, B, max_len, cfg.n_kv_heads, cfg.head_dim), dt)
+    elif cfg.family == "encdec":
+        out["k"] = sds(_kv_shape(cfg, B, max_len), dt)
+        out["v"] = sds(_kv_shape(cfg, B, max_len), dt)
+        out["xk"] = sds((cfg.n_layers, B, cfg.encoder_seq, cfg.n_kv_heads,
+                         cfg.head_dim), dt)
+        out["xv"] = sds((cfg.n_layers, B, cfg.encoder_seq, cfg.n_kv_heads,
+                         cfg.head_dim), dt)
+    else:
+        raise ValueError(cfg.family)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: Dict, tokens, *, embeds=None,
+            attn_impl: str = "auto"):
+    """Full-sequence pass that materializes the KV/state caches and the
+    last-position logits.  Returns (logits (B, V), cache)."""
+    hidden, kvs, aux = forward(cfg, params, tokens, embeds=embeds,
+                               attn_impl=attn_impl, collect_cache=True)
+    B, S = tokens.shape[0], tokens.shape[1]
+    cache: Dict = {"len": jnp.asarray(S, jnp.int32)}
+    if cfg.family in ("dense", "moe") and kvs is not None:
+        cache["k"], cache["v"] = kvs
+    elif cfg.family == "encdec" and kvs is not None:
+        (cache["k"], cache["v"]), cache["xk"], cache["xv"] = \
+            (kvs[0], kvs[1], kvs[2])
+    elif cfg.family == "ssm" and kvs is not None:
+        cache["conv"], cache["state"] = kvs["conv"], kvs["state"]
+    elif cfg.family == "hybrid" and kvs is not None:
+        states, kv = kvs
+        # inner scan emits (n_seg, attn_every, B, ...) -> flatten to (L, ...)
+        flat = lambda a: a.reshape((-1,) + a.shape[2:])
+        cache["conv"] = flat(states["conv"])
+        cache["state"] = flat(states["state"])
+        cache["k"], cache["v"] = kv
+    logits = logits_fn(cfg, params, hidden[:, -1:, :])[:, 0]
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, token,
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """One new token for every sequence in the batch.
+
+    token: (B,) int32.  Returns (logits (B, V), updated cache)."""
+    B = token.shape[0]
+    x = params["embed"][token][:, None, :]              # (B,1,D)
+    pos = jnp.broadcast_to(cache["len"][None, None], (B, 1))
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "moe"):
+        def body(x, inp):
+            if cfg.family == "dense":
+                p, kc, vc = inp
+                x, (k2, v2) = _dense_block(p, cfg, x, pos, "full",
+                                           cache=(kc, vc),
+                                           cache_len=cache["len"])
+                return x, (k2, v2)
+            p, kc, vc = inp
+            x, (k2, v2), _aux = _moe_block_apply(p, cfg, x, pos, "full",
+                                                 cache=(kc, vc),
+                                                 cache_len=cache["len"])
+            return x, (k2, v2)
+        x, (k_new, v_new) = lax.scan(body, x,
+                                     (params["layers"], cache["k"],
+                                      cache["v"]))
+        new_cache["k"], new_cache["v"] = k_new, v_new
+
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            p, conv, state = inp
+            x, c2 = ssm_layer_apply(p, x, cfg,
+                                    decode_cache={"conv": conv,
+                                                  "state": state})
+            return x, (c2["conv"], c2["state"])
+        x, (conv_new, state_new) = lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["state"]))
+        new_cache["conv"], new_cache["state"] = conv_new, state_new
+
+    elif cfg.family == "hybrid":
+        n_seg = cfg.n_layers // cfg.attn_every
+        seg = lambda a: a.reshape((n_seg, cfg.attn_every) + a.shape[1:])
+        seg_params = jax.tree.map(seg, params["layers"])
+        seg_conv = seg(cache["conv"])
+        seg_state = seg(cache["state"])
+        shared = params["shared_attn"]
+
+        def segment(x, inp):
+            sp, conv_s, state_s, kc, vc = inp
+
+            def inner(x, inp2):
+                p, conv, state = inp2
+                x, c2 = ssm_layer_apply(p, x, cfg,
+                                        decode_cache={"conv": conv,
+                                                      "state": state})
+                return x, (c2["conv"], c2["state"])
+            x, (conv2, state2) = lax.scan(inner, x, (sp, conv_s, state_s))
+            x, (k2, v2) = _dense_block(shared, cfg, x, pos, "full",
+                                       cache=(kc, vc),
+                                       cache_len=cache["len"])
+            return x, (conv2, state2, k2, v2)
+
+        x, (conv_new, state_new, k_new, v_new) = lax.scan(
+            segment, x, (seg_params, seg_conv, seg_state, cache["k"],
+                         cache["v"]))
+        unseg = lambda a: a.reshape((cfg.n_layers,) + a.shape[2:])
+        new_cache["conv"], new_cache["state"] = unseg(conv_new), unseg(state_new)
+        new_cache["k"], new_cache["v"] = k_new, v_new
+
+    elif cfg.family == "encdec":
+        D = cfg.d_model
+        x = x + lax.dynamic_slice_in_dim(
+            _sinusoid(cache["k"].shape[2] + 1, D), cache["len"], 1,
+            axis=0)[None].astype(x.dtype)
+
+        def body(x, inp):
+            p, kc, vc, xk, xv = inp
+            a = layer_norm(x, p["ln1"], p["ln1_b"], cfg.norm_eps)
+            from .model import _attn_apply
+            o, (k2, v2) = _attn_apply(p, cfg, a, None, cache=(kc, vc),
+                                      cache_len=cache["len"])
+            x = x + o
+            c = layer_norm(x, p["lnx"], p["lnx_b"], cfg.norm_eps)
+            o2, _ = _attn_apply(p, cfg, c, None, causal=False, kv=(xk, xv),
+                                prefix="x")
+            x = x + o2
+            m = layer_norm(x, p["ln2"], p["ln2_b"], cfg.norm_eps)
+            from .layers import gelu_mlp
+            x = x + gelu_mlp(m, p["w1"], p["b1"], p["w2"], p["b2"])
+            return x, (k2, v2)
+        x, (k_new, v_new) = lax.scan(body, x,
+                                     (params["dec_layers"], cache["k"],
+                                      cache["v"], cache["xk"], cache["xv"]))
+        new_cache["k"], new_cache["v"] = k_new, v_new
+        x = layer_norm(x, params["final_norm"], params["final_norm_b"],
+                       cfg.norm_eps)
+        logits = logits_fn(cfg, params, x)[:, 0]
+        new_cache["len"] = cache["len"] + 1
+        return logits, new_cache
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(cfg, params, x)[:, 0]
+    new_cache["len"] = cache["len"] + 1
+    return logits, new_cache

@@ -1,0 +1,284 @@
+"""Neural-net building blocks shared by all architecture families.
+
+Pure-functional JAX: params are pytrees of arrays, layer stacks are scanned
+(``jax.lax.scan``) so the lowered HLO stays compact for the 512-device
+dry-run.  Attention is GQA with optional qk-norm, RoPE or M-RoPE, and a
+memory-bounded *chunked* (online-softmax) path used for long sequences —
+the XLA-portable twin of the Pallas flash-attention kernel in
+``repro.kernels``.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32)
+                     / (head_dim // 2))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float,
+                sections=(0.25, 0.375, 0.375)):
+    """Qwen2-VL M-RoPE: rotary frequencies split into (temporal, height,
+    width) sections, each driven by its own position stream.
+
+    x: (..., S, H, hd); positions3: (3, ..., S).  For text-only input all
+    three streams are equal and M-RoPE reduces to RoPE.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    n_t = int(half * sections[0])
+    n_h = int(half * sections[1])
+    n_w = half - n_t - n_h
+    freqs = rope_freqs(hd, theta)                      # (half,)
+    sec_pos = jnp.concatenate([
+        jnp.repeat(positions3[0][..., :, None], n_t, axis=-1),
+        jnp.repeat(positions3[1][..., :, None], n_h, axis=-1),
+        jnp.repeat(positions3[2][..., :, None], n_w, axis=-1),
+    ], axis=-1).astype(jnp.float32)                    # (..., S, half)
+    ang = sec_pos * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _gqa_scores_einsum(q, k):
+    """q: (B,S,K,G,hd), k: (B,T,K,hd) -> (B,K,G,S,T)."""
+    return jnp.einsum("bskgh,btkh->bkgst", q, k)
+
+
+def full_attention(q, k, v, *, causal: bool, q_offset=0):
+    """Reference attention. q:(B,S,H,hd) k,v:(B,T,K,hd); H = K*G."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, S, K, G, hd)
+    scores = _gqa_scores_einsum(qg.astype(jnp.float32) * scale,
+                                k.astype(jnp.float32))
+    if causal:
+        qpos = jnp.arange(S) + q_offset
+        kpos = jnp.arange(T)
+        mask = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
+                      kv_chunk: int = 2048, score_dtype=None,
+                      remat_chunks: bool = False):
+    """Memory-bounded online-softmax attention (flash-style, pure lax.scan).
+
+    Never materializes the (S, T) score matrix: scans KV chunks carrying a
+    running (max, denominator, numerator).  This is the XLA-portable path
+    used on long sequences and in the dry-run; the Pallas kernel implements
+    the same tiling for TPU VMEM.
+
+    score_dtype: dtype for the score/p tensors (§Perf: bf16 halves the
+    dominant attention traffic; reductions stay f32).
+    remat_chunks: checkpoint the scan body so backward recomputes per-chunk
+    scores instead of stashing an (n_chunks, B,K,G,S,Tc) residual buffer.
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    sdt = score_dtype or jnp.float32
+    NEG = jnp.asarray(-3e38 if sdt == jnp.float32 else -3e4, sdt)
+    n_chunks = -(-T // kv_chunk)
+    pad = n_chunks * kv_chunk - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, kv_chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, K, hd).transpose(1, 0, 2, 3, 4)
+
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q.astype(sdt) * scale).reshape(B, S, K, G, hd)
+    qpos = jnp.arange(S) + q_offset
+
+    def step(carry, inp):
+        m, den, num = carry                     # (B,K,G,S), ..., (B,K,G,S,hd)
+        ci, k_i, v_i = inp
+        kpos = ci * kv_chunk + jnp.arange(kv_chunk)
+        s = _gqa_scores_einsum(qg, k_i.astype(sdt))          # (B,K,G,S,Tc)
+        valid = kpos[None, :] < T + 0 * qpos[:, None]
+        if causal:
+            valid = valid & (kpos[None, :] <= qpos[:, None])
+        s = jnp.where(valid[None, None, None], s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1).astype(jnp.float32))
+        m_safe = jnp.where(m_new > -1e30, m_new, 0.0)
+        alpha = jnp.where(m > -1e30, jnp.exp(m - m_safe), 0.0)
+        p = jnp.exp(s.astype(jnp.float32) - m_safe[..., None]).astype(sdt)
+        p = jnp.where(valid[None, None, None], p,
+                      jnp.asarray(0.0, sdt))
+        den_new = den * alpha + p.sum(axis=-1).astype(jnp.float32)
+        num_new = (num * alpha[..., None]
+                   + jnp.einsum("bkgst,btkh->bkgsh", p, v_i.astype(sdt),
+                                preferred_element_type=jnp.float32))
+        return (m_new, den_new, num_new), None
+
+    if remat_chunks:
+        step = jax.checkpoint(step)
+
+    m0 = jnp.full((B, K, G, S), -jnp.inf, jnp.float32)
+    d0 = jnp.zeros((B, K, G, S), jnp.float32)
+    n0 = jnp.zeros((B, K, G, S, hd), jnp.float32)
+    (m, den, num), _ = lax.scan(step, (m0, d0, n0),
+                                (jnp.arange(n_chunks), kc, vc))
+    out = num / jnp.maximum(den, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-token decode: q (B,1,H,hd) against (B,Smax,K,hd) caches with
+    ``cache_len`` valid entries (scalar or (B,))."""
+    B, _, H, hd = q.shape
+    Smax, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q.astype(jnp.float32) * scale).reshape(B, 1, K, G, hd)
+    s = _gqa_scores_einsum(qg, k_cache.astype(jnp.float32))  # (B,K,G,1,Smax)
+    pos = jnp.arange(Smax)
+    valid = pos[None, :] < jnp.reshape(jnp.asarray(cache_len), (-1, 1))
+    s = jnp.where(valid[:, None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x, w1, b1, w2, b2):
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w1) + b1)
+    return jnp.einsum("...f,fd->...d", h, w2) + b2
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-based capacity dispatch)
+# ---------------------------------------------------------------------------
+
+def moe_block(x, router_w, w_gate, w_up, w_down, *, k: int,
+              capacity_factor: float = 1.25, groups: int = 1):
+    """Top-k MoE with sort-based dispatch into a static-capacity buffer.
+
+    x: (T, D); router_w: (D, E); expert weights: (E, D, F) / (E, F, D).
+    Returns (out (T, D), aux) where aux carries router stats — including
+    per-expert token loads, the paper's LIB signal at the MoE level.
+
+    groups > 1 (§Perf): dispatch LOCALLY per token group — the argsort /
+    scatter / gather batch over a leading group dim that GSPMD shards over
+    the data axes, so no device ever materializes the global token array
+    (grouped == per-shard capacity, standard in large-scale MoE).
+    """
+    if groups > 1:
+        from ..distributed.ctx import constrain_tokens_grouped
+        T, D = x.shape
+        assert T % groups == 0, (T, groups)
+        xg = constrain_tokens_grouped(x.reshape(groups, T // groups, D))
+        out, aux = jax.vmap(
+            lambda xx: moe_block(xx, router_w, w_gate, w_up, w_down, k=k,
+                                 capacity_factor=capacity_factor))(xg)
+        out = out.reshape(T, D)
+        aux = {"expert_load": aux["expert_load"].sum(0),
+               "dropped_frac": aux["dropped_frac"].mean(),
+               "router_z": aux["router_z"].mean(),
+               "load_balance": aux["load_balance"].mean()}
+        return out, aux
+    T, D = x.shape
+    E = router_w.shape[-1]
+    C = max(1, int(capacity_factor * k * T / E))
+
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = lax.top_k(probs, k)                 # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = topi.reshape(-1)                        # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_w = topw.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    # rank within expert = index - first index of this expert in sorted order
+    first = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")
+    rank = jnp.arange(T * k) - first[e_sorted]
+    keep = rank < C
+    slot = jnp.where(keep, e_sorted * C + rank, E * C)   # overflow -> dropped
+
+    buf = jnp.zeros((E * C + 1, D), x.dtype)
+    buf = buf.at[slot].set(x[flat_t[order]], mode="drop")
+    buf = buf[:E * C].reshape(E, C, D)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, w_down)
+
+    y_flat = y.reshape(E * C, D)
+    gathered = jnp.where(keep[:, None],
+                         y_flat[jnp.clip(slot, 0, E * C - 1)], 0.0)
+    out = jnp.zeros((T, D), x.dtype)
+    out = out.at[flat_t[order]].add(gathered * flat_w[order][:, None])
+
+    # router aux: per-expert load (tokens routed) and dropped fraction
+    load = jnp.bincount(flat_e, length=E)
+    aux = {
+        "expert_load": load,
+        "dropped_frac": 1.0 - keep.mean(),
+        "router_z": jnp.mean(jax.scipy.special.logsumexp(logits, -1) ** 2),
+        "load_balance": E * jnp.mean(probs.mean(0) *
+                                     (load / jnp.maximum(load.sum(), 1))),
+    }
+    return out, aux

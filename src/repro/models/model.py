@@ -1,0 +1,432 @@
+"""Architecture assembly: init / forward / prefill / decode for all families.
+
+Families: dense (llama/qwen/granite/nemo/VLM-backbone), moe (olmoe, grok),
+ssm (mamba2), hybrid (zamba2: SSM stack + shared attention block), encdec
+(whisper backbone; audio frontend stubbed to precomputed frame embeddings).
+
+All layer stacks are scanned; blocks are optionally rematerialized
+(cfg.remat) so the dry-run activations stay at layer-boundary footprint.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from .layers import (apply_mrope, apply_rope, chunked_attention,
+                     decode_attention, full_attention, gelu_mlp, layer_norm,
+                     moe_block, rms_norm, swiglu)
+from .ssm import init_ssm_layer, ssm_layer_apply
+from ..distributed.ctx import (attn_bf16, attn_remat,
+                               constrain_boundary,
+                               constrain_expert_weights,
+                               moe_groups)
+
+ATTN_CHUNK_THRESHOLD = 2048   # use online-softmax attention above this S
+CE_CHUNK = 512                # sequence chunk for the blockwise CE loss
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _init_attn(key, cfg: ModelConfig, dtype):
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(D)
+    p = {
+        "wq": (jax.random.normal(ks[0], (D, H * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (D, K * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (D, K * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (H * hd, D)) * s / math.sqrt(2 * max(cfg.n_layers, 1))).astype(dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _init_dense_layer(key, cfg: ModelConfig, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    k_attn, k1, k2, k3 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(D)
+    p = {
+        "ln1": jnp.ones((D,), dtype),
+        "ln2": jnp.ones((D,), dtype),
+        **_init_attn(k_attn, cfg, dtype),
+        "w_gate": (jax.random.normal(k1, (D, F)) * s).astype(dtype),
+        "w_up": (jax.random.normal(k2, (D, F)) * s).astype(dtype),
+        "w_down": (jax.random.normal(k3, (F, D)) * s / math.sqrt(2 * max(cfg.n_layers, 1))).astype(dtype),
+    }
+    return p
+
+
+def _init_moe_layer(key, cfg: ModelConfig, dtype):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k_attn, kr, k1, k2, k3 = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(D)
+    return {
+        "ln1": jnp.ones((D,), dtype),
+        "ln2": jnp.ones((D,), dtype),
+        **_init_attn(k_attn, cfg, dtype),
+        "router": (jax.random.normal(kr, (D, E)) * s).astype(dtype),
+        "we_gate": (jax.random.normal(k1, (E, D, F)) * s).astype(dtype),
+        "we_up": (jax.random.normal(k2, (E, D, F)) * s).astype(dtype),
+        "we_down": (jax.random.normal(k3, (E, F, D)) * s / math.sqrt(2 * cfg.n_layers)).astype(dtype),
+    }
+
+
+def _init_encdec_layer(key, cfg: ModelConfig, dtype, cross: bool):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(D)
+    p = {
+        "ln1": jnp.ones((D,), dtype), "ln1_b": jnp.zeros((D,), dtype),
+        "ln2": jnp.ones((D,), dtype), "ln2_b": jnp.zeros((D,), dtype),
+        **_init_attn(ks[0], cfg, dtype),
+        "w1": (jax.random.normal(ks[1], (D, F)) * s).astype(dtype),
+        "b1": jnp.zeros((F,), dtype),
+        "w2": (jax.random.normal(ks[2], (F, D)) * s).astype(dtype),
+        "b2": jnp.zeros((D,), dtype),
+    }
+    if cross:
+        kc = jax.random.split(ks[3], 1)[0]
+        p.update({("x" + k): v for k, v in _init_attn(kc, cfg, dtype).items()})
+        p["lnx"] = jnp.ones((D,), dtype)
+        p["lnx_b"] = jnp.zeros((D,), dtype)
+    return p
+
+
+def _stack(layer_init, key, n, *args):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: layer_init(k, *args))(keys)
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Embedding tables padded to a multiple of 256 so the vocab axis always
+    shards over the model axis (whisper's 51865, mamba2's 50280...).  Padded
+    ids are valid but unused (§Perf C2; standard practice)."""
+    return -(-cfg.vocab_size // 256) * 256
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dtype = _dtype(cfg)
+    k_emb, k_layers, k_head, k_extra = jax.random.split(key, 4)
+    D, V = cfg.d_model, padded_vocab(cfg)
+    params: Dict = {
+        "embed": (jax.random.normal(k_emb, (V, D)) / math.sqrt(D)).astype(dtype),
+        "final_norm": jnp.ones((D,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(k_head, (D, V))
+                             / math.sqrt(D)).astype(dtype)
+
+    if cfg.family == "dense":
+        params["layers"] = _stack(_init_dense_layer, k_layers, cfg.n_layers,
+                                  cfg, dtype)
+    elif cfg.family == "moe":
+        params["layers"] = _stack(_init_moe_layer, k_layers, cfg.n_layers,
+                                  cfg, dtype)
+    elif cfg.family == "ssm":
+        params["layers"] = _stack(init_ssm_layer, k_layers, cfg.n_layers,
+                                  cfg, dtype)
+    elif cfg.family == "hybrid":
+        params["layers"] = _stack(init_ssm_layer, k_layers, cfg.n_layers,
+                                  cfg, dtype)
+        shared = _init_dense_layer(k_extra, cfg, dtype)
+        params["shared_attn"] = shared
+    elif cfg.family == "encdec":
+        ke, kd = jax.random.split(k_layers)
+        params["enc_layers"] = _stack(partial(_init_encdec_layer, cross=False),
+                                      ke, cfg.encoder_layers, cfg, dtype)
+        params["dec_layers"] = _stack(partial(_init_encdec_layer, cross=True),
+                                      kd, cfg.n_layers, cfg, dtype)
+        params["enc_final_norm"] = jnp.ones((D,), dtype)
+        params["enc_final_norm_b"] = jnp.zeros((D,), dtype)
+        params["final_norm_b"] = jnp.zeros((D,), dtype)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ===========================================================================
+# attention block application
+# ===========================================================================
+
+def _positions3(positions):
+    return jnp.stack([positions, positions, positions])
+
+
+def _attn_apply(p, cfg: ModelConfig, x, positions, *, causal=True,
+                attn_impl="auto", q_offset=0, kv=None, cache=None,
+                cache_len=None, prefix=""):
+    """Shared attention application.  Returns (out, (k, v) or None).
+
+    kv: precomputed (k, v) for cross attention.
+    cache: (k_cache, v_cache) for decode (x is a single step).
+    """
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = lambda n: p[prefix + n]
+    q = jnp.einsum("bsd,de->bse", x, g("wq")).reshape(B, S, H, hd)
+    if kv is None:
+        k = jnp.einsum("bsd,de->bse", x, g("wk")).reshape(B, S, K, hd)
+        v = jnp.einsum("bsd,de->bse", x, g("wv")).reshape(B, S, K, hd)
+    else:
+        k, v = kv
+    if cfg.qk_norm and (prefix + "q_norm") in p:
+        q = rms_norm(q, g("q_norm"), cfg.norm_eps)
+        k = rms_norm(k, g("k_norm"), cfg.norm_eps) if kv is None else k
+    if positions is not None and kv is None:
+        if cfg.mrope:
+            q = apply_mrope(q, _positions3(positions), cfg.rope_theta)
+            k = apply_mrope(k, _positions3(positions), cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is not None:
+        k_cache, v_cache = cache
+        idx = jnp.reshape(cache_len, ())
+        k_cache = lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), idx, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), idx, axis=1)
+        o = decode_attention(q, k_cache, v_cache, idx + 1)
+        kv_out = (k_cache, v_cache)
+    else:
+        T = k.shape[1]
+        use_chunked = (attn_impl == "chunked" or
+                       (attn_impl == "auto" and T > ATTN_CHUNK_THRESHOLD))
+        if use_chunked:
+            o = chunked_attention(
+                q, k, v, causal=causal, q_offset=q_offset,
+                score_dtype=jnp.bfloat16 if attn_bf16() else None,
+                remat_chunks=attn_remat())
+        else:
+            o = full_attention(q, k, v, causal=causal, q_offset=q_offset)
+        kv_out = (k, v)
+    out = jnp.einsum("bse,ed->bsd", o.reshape(B, S, H * hd), g("wo"))
+    return out, kv_out
+
+
+def _dense_block(p, cfg, x, positions, attn_impl, collect_kv=False,
+                 cache=None, cache_len=None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    o, kv = _attn_apply(p, cfg, h, positions, attn_impl=attn_impl,
+                        cache=cache, cache_len=cache_len)
+    x = x + o
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + swiglu(h2, p["w_gate"], p["w_up"], p["w_down"])
+    return (x, kv) if (collect_kv or cache is not None) else (x, None)
+
+
+def _moe_block_apply(p, cfg, x, positions, attn_impl, cache=None,
+                     cache_len=None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    o, kv = _attn_apply(p, cfg, h, positions, attn_impl=attn_impl,
+                        cache=cache, cache_len=cache_len)
+    x = x + o
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    B, S, D = h2.shape
+    # NOTE §Perf B2 (refuted): constraining expert weights to gather
+    # (replicate D over dp) backfired 14x — GSPMD replicated the expert
+    # grad einsums across the data axes.  Kept out; see EXPERIMENTS.md.
+    y, aux = moe_block(h2.reshape(B * S, D), p["router"], p["we_gate"],
+                       p["we_up"], p["we_down"], k=cfg.experts_per_token,
+                       capacity_factor=cfg.capacity_factor,
+                       groups=(moe_groups() if cache is None else 1))
+    return x + y.reshape(B, S, D), kv, aux
+
+
+# ===========================================================================
+# forward (train / prefill trunk)
+# ===========================================================================
+
+def forward(cfg: ModelConfig, params: Dict, tokens, *, embeds=None,
+            attn_impl: str = "auto", collect_cache: bool = False):
+    """Token trunk -> final hidden states (B, S, D).
+
+    collect_cache: also return per-layer (k, v) stacks (prefill path).
+    Returns (hidden, cache_or_None, aux dict).
+    """
+    if cfg.family == "encdec":
+        return _encdec_forward(cfg, params, tokens, embeds=embeds,
+                               collect_cache=collect_cache)
+
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    aux: Dict = {}
+
+    remat = jax.checkpoint if cfg.remat else (lambda f: f)
+
+    if cfg.family == "dense":
+        @remat
+        def body(x, p):
+            x, kv = _dense_block(p, cfg, x, positions, attn_impl,
+                                 collect_kv=collect_cache)
+            return constrain_boundary(x), kv if collect_cache else None
+        x, kvs = lax.scan(body, constrain_boundary(x), params["layers"])
+        cache = kvs
+
+    elif cfg.family == "moe":
+        @remat
+        def body(x, p):
+            x, kv, aux_l = _moe_block_apply(p, cfg, x, positions, attn_impl)
+            out = (kv if collect_cache else None, aux_l["expert_load"])
+            return constrain_boundary(x), out
+        x, (kvs, loads) = lax.scan(body, constrain_boundary(x),
+                                   params["layers"])
+        aux["expert_load"] = loads            # (L, E) — MoE LIB signal
+        cache = kvs
+
+    elif cfg.family == "ssm":
+        @remat
+        def body(x, p):
+            x, st = ssm_layer_apply(p, x, cfg, collect_state=collect_cache)
+            return constrain_boundary(x), st
+        x, cache = lax.scan(body, constrain_boundary(x), params["layers"])
+
+    elif cfg.family == "hybrid":
+        x, cache = _hybrid_forward(cfg, params, x, positions, attn_impl,
+                                   collect_cache)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, cache, aux
+
+
+def _hybrid_forward(cfg, params, x, positions, attn_impl, collect_cache):
+    """Zamba2: scan segments of `attn_every` SSM layers, apply the *shared*
+    attention block after each segment."""
+    n_seg = cfg.n_layers // cfg.attn_every
+    assert n_seg * cfg.attn_every == cfg.n_layers, "attn_every must divide n_layers"
+    seg_params = jax.tree.map(
+        lambda a: a.reshape((n_seg, cfg.attn_every) + a.shape[1:]),
+        params["layers"])
+    shared = params["shared_attn"]
+    remat = jax.checkpoint if cfg.remat else (lambda f: f)
+
+    @remat
+    def segment(x, seg_p):
+        def inner(x, p):
+            x, st = ssm_layer_apply(p, x, cfg, collect_state=collect_cache)
+            return x, st
+        x, states = lax.scan(inner, x, seg_p)
+        x, kv = _dense_block(shared, cfg, x, positions, attn_impl,
+                             collect_kv=collect_cache)
+        out = (states, kv) if collect_cache else None
+        return constrain_boundary(x), out
+
+    x, outs = lax.scan(segment, x, seg_params)
+    return x, outs
+
+
+def _sinusoid(S, D):
+    pos = jnp.arange(S)[:, None].astype(jnp.float32)
+    i = jnp.arange(D // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / D)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _encdec_forward(cfg, params, tokens, *, embeds, collect_cache):
+    """Whisper backbone.  embeds: (B, encoder_seq, D) stub frame embeddings."""
+    assert embeds is not None, "encdec needs frontend embeddings"
+    B, Senc, D = embeds.shape
+    h = embeds.astype(_dtype(cfg)) + _sinusoid(Senc, D).astype(_dtype(cfg))
+
+    def enc_body(x, p):
+        a = layer_norm(x, p["ln1"], p["ln1_b"], cfg.norm_eps)
+        o, _ = _attn_apply(p, cfg, a, None, causal=False)
+        x = x + o
+        m = layer_norm(x, p["ln2"], p["ln2_b"], cfg.norm_eps)
+        x = x + gelu_mlp(m, p["w1"], p["b1"], p["w2"], p["b2"])
+        return constrain_boundary(x), None
+    h, _ = lax.scan(enc_body, h, params["enc_layers"])
+    enc_out = layer_norm(h, params["enc_final_norm"],
+                         params["enc_final_norm_b"], cfg.norm_eps)
+
+    Bd, S = tokens.shape
+    x = params["embed"][tokens] + _sinusoid(S, D).astype(_dtype(cfg))
+
+    def dec_body(x, p):
+        a = layer_norm(x, p["ln1"], p["ln1_b"], cfg.norm_eps)
+        o, kv = _attn_apply(p, cfg, a, None, causal=True)
+        x = x + o
+        c = layer_norm(x, p["lnx"], p["lnx_b"], cfg.norm_eps)
+        xk = jnp.einsum("bsd,de->bse", enc_out,
+                        p["xwk"]).reshape(B, Senc, cfg.n_kv_heads, cfg.head_dim)
+        xv = jnp.einsum("bsd,de->bse", enc_out,
+                        p["xwv"]).reshape(B, Senc, cfg.n_kv_heads, cfg.head_dim)
+        o2, _ = _attn_apply(p, cfg, c, None, causal=False, kv=(xk, xv),
+                            prefix="x")
+        x = x + o2
+        m = layer_norm(x, p["ln2"], p["ln2_b"], cfg.norm_eps)
+        x = x + gelu_mlp(m, p["w1"], p["b1"], p["w2"], p["b2"])
+        return constrain_boundary(x), ((kv, xk, xv) if collect_cache
+                                       else None)
+
+    x, kvs = lax.scan(dec_body, x, params["dec_layers"])
+    x = layer_norm(x, params["final_norm"], params["final_norm_b"],
+                   cfg.norm_eps)
+    return x, kvs, {"enc_out": enc_out}
+
+
+# ===========================================================================
+# logits & loss
+# ===========================================================================
+
+def _head(cfg, params):
+    return (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+
+
+def logits_fn(cfg, params, hidden):
+    return jnp.einsum("bsd,dv->bsv", hidden, _head(cfg, params))
+
+
+def chunked_ce_loss(cfg, params, hidden, labels, z_loss: float = 1e-4):
+    """Blockwise cross-entropy: never materializes (B, S, V) logits.
+    hidden (B,S,D), labels (B,S) int32.  Returns scalar mean loss."""
+    B, S, D = hidden.shape
+    head = _head(cfg, params)
+    n_chunks = -(-S // CE_CHUNK)
+    pad = n_chunks * CE_CHUNK - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = hidden.reshape(B, n_chunks, CE_CHUNK, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, CE_CHUNK).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def step(acc, inp):
+        # checkpointed: backward recomputes the (B, CE_CHUNK, V) logits
+        # instead of stashing them per chunk (§Perf A4)
+        h, l = inp
+        lg = jnp.einsum("bsd,dv->bsv", h, head).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(
+            lg, jnp.clip(l, 0)[..., None], axis=-1)[..., 0]
+        valid = (l >= 0).astype(jnp.float32)
+        nll = ((lse - gold) + z_loss * lse ** 2) * valid
+        return (acc[0] + nll.sum(), acc[1] + valid.sum()), None
+
+    (tot, cnt), _ = lax.scan(step, (jnp.float32(0), jnp.float32(0)), (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, attn_impl: str = "auto"):
+    """batch: {"tokens": (B,S), "labels": (B,S), ["embeds"]}."""
+    hidden, _, aux = forward(cfg, params, batch["tokens"],
+                             embeds=batch.get("embeds"), attn_impl=attn_impl)
+    loss = chunked_ce_loss(cfg, params, hidden, batch["labels"])
+    return loss, aux

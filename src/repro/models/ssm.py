@@ -1,0 +1,197 @@
+"""Mamba2 — SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Chunked matmul formulation (the TPU-friendly one: intra-chunk work is dense
+MXU matmuls, inter-chunk state passing is a short ``lax.scan``):
+
+    within chunk c:  Y_diag = (C B^T ∘ L) (dt·x)        L = exp(segsum(dt·A))
+    chunk states:    S_c    = (dt·B · decay_to_end)^T (x)
+    across chunks:   h_{c+1} = exp(sum dt·A)_c · h_c + S_c
+    offset:          Y_off  = C h_prev · decay_from_start
+
+The same tiling is implemented as a Pallas TPU kernel in
+``repro.kernels.ssd_scan``; this module is the lowering-portable reference
+used by the models and the dry-run.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{k in (j, i]} x[..., k]
+    (lower-triangular), -inf above the diagonal."""
+    Tq = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Tq, Tq), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD scan.
+
+    x:  (b, S, nh, hp)   per-head inputs
+    dt: (b, S, nh)       positive step sizes (softplus'd)
+    A:  (nh,)            negative decay rates
+    B:  (b, S, st)       input projection (ngroups=1, shared across heads)
+    C:  (b, S, st)       output projection
+    Returns y: (b, S, nh, hp) and final state (b, nh, hp, st).
+    """
+    b, S, nh, hp = x.shape
+    st = B.shape[-1]
+    chunk = min(chunk, S)
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+
+    xc = x.reshape(b, nc, chunk, nh, hp)
+    dtc = dt.reshape(b, nc, chunk, nh)
+    Bc = B.reshape(b, nc, chunk, st)
+    Cc = C.reshape(b, nc, chunk, st)
+
+    dA = dtc * A[None, None, None, :]                    # (b,nc,Q,nh)
+    dA_cum = jnp.cumsum(dA, axis=2)                      # within-chunk cumsum
+    dA_total = dA_cum[:, :, -1]                          # (b,nc,nh)
+
+    xdt = xc * dtc[..., None]                            # (b,nc,Q,nh,hp)
+
+    # ---- intra-chunk (diagonal) term --------------------------------------
+    # L[i,j] = exp(segsum dA) lower-tri; scores = C_i · B_j
+    L = jnp.exp(segsum(jnp.moveaxis(dA, 3, 2)))          # (b,nc,nh,Q,Q)
+    scores = jnp.einsum("bcis,bcjs->bcij", Cc, Bc)       # (b,nc,Q,Q)
+    M = scores[:, :, None] * L                           # (b,nc,nh,Q,Q)
+    Y_diag = jnp.einsum("bchij,bcjhp->bcihp", M, xdt)
+
+    # ---- chunk states ------------------------------------------------------
+    decay_to_end = jnp.exp(dA_total[:, :, None, :] - dA_cum)   # (b,nc,Q,nh)
+    S_c = jnp.einsum("bcjs,bcjh,bcjhp->bchps",
+                     Bc, decay_to_end * dtc, xc)         # (b,nc,nh,hp,st)
+
+    # ---- inter-chunk recurrence -------------------------------------------
+    def step(h, inp):
+        S_i, g = inp                                     # g: (b,nh)
+        h_next = h * jnp.exp(g)[..., None, None] + S_i
+        return h_next, h                                  # emit state *before* chunk
+
+    h0 = jnp.zeros((b, nh, hp, st), jnp.float32)
+    h_last, h_prevs = lax.scan(step,
+                               h0,
+                               (jnp.moveaxis(S_c, 1, 0).astype(jnp.float32),
+                                jnp.moveaxis(dA_total, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # (b,nc,nh,hp,st)
+
+    # ---- inter-chunk (offset) term ----------------------------------------
+    decay_from_start = jnp.exp(dA_cum)                   # (b,nc,Q,nh)
+    Y_off = jnp.einsum("bcis,bchps,bcih->bcihp",
+                       Cc, h_prevs.astype(Cc.dtype), decay_from_start)
+
+    y = (Y_diag + Y_off).reshape(b, S, nh, hp)
+    return y.astype(x.dtype), h_last.astype(jnp.float32)
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """One-token recurrence.  state: (b,nh,hp,st); x_t: (b,nh,hp);
+    dt_t: (b,nh); B_t/C_t: (b,st)."""
+    dA = jnp.exp(dt_t * A[None, :])                      # (b,nh)
+    inc = jnp.einsum("bhp,bs,bh->bhps", x_t, B_t, dt_t)
+    state = state * dA[..., None, None] + inc
+    y = jnp.einsum("bhps,bs->bhp", state, C_t)
+    return state, y.astype(x_t.dtype)
+
+
+def causal_conv1d(x, w, conv_state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv.  x: (b,S,ch), w: (k,ch).
+    Training path: full-sequence conv.  Decode path: pass conv_state
+    (b, k-1, ch) and S == 1; returns (y, new_state)."""
+    k = w.shape[0]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+        return jax.nn.silu(y), xp[:, -(k - 1):] if k > 1 else None
+    window = jnp.concatenate([conv_state, x], axis=1)    # (b,k,ch)
+    y = jnp.einsum("bkc,kc->bc", window, w)[:, None]
+    return jax.nn.silu(y), window[:, 1:]
+
+
+def ssm_layer_apply(p: Dict, x, cfg, decode_cache: Optional[Dict] = None,
+                    collect_state: bool = False):
+    """One Mamba2 block. x: (b,S,D).
+
+    p: {ln, in_proj, conv_w, A_log, D, gate_norm, out_proj, dt_bias}
+    decode_cache: {"conv": (b,k-1,ch), "state": (b,nh,hp,st)} for S==1.
+    collect_state: full-sequence (prefill) path also returns the final
+    {"conv", "state"} cache.
+    Returns (y, new_cache_or_None).
+    """
+    b, S, Dm = x.shape
+    di, st, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    hp = cfg.ssm_headdim
+
+    h = rms_norm_local(x, p["ln"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    z, xbc, dt_raw = jnp.split(proj, [di, di + di + 2 * st], axis=-1)
+    # xbc -> conv -> x, B, C
+    if decode_cache is None:
+        xbc, conv_tail = causal_conv1d(xbc, p["conv_w"])
+        new_conv = conv_tail
+    else:
+        xbc, new_conv = causal_conv1d(xbc, p["conv_w"], decode_cache["conv"])
+    xs, B, C = jnp.split(xbc, [di, di + st], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])      # (b,S,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (nh,)
+    xh = xs.reshape(b, S, nh, hp)
+
+    if decode_cache is None:
+        y, last_state = ssd_chunked(xh, dt, A,
+                                    B.astype(jnp.float32),
+                                    C.astype(jnp.float32), cfg.ssm_chunk)
+        new_cache = None
+        if collect_state:
+            new_cache = {"conv": new_conv, "state": last_state}
+    else:
+        state, y1 = ssd_decode_step(decode_cache["state"],
+                                    xh[:, 0].astype(jnp.float32),
+                                    dt[:, 0], A,
+                                    B[:, 0].astype(jnp.float32),
+                                    C[:, 0].astype(jnp.float32))
+        y = y1[:, None]
+        new_cache = {"conv": new_conv, "state": state}
+
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, S, di)
+    # gated RMSNorm (Mamba2): norm(y * silu(z))
+    y = rms_norm_local(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return x + out.astype(x.dtype), new_cache
+
+
+def rms_norm_local(x, w, eps):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def init_ssm_layer(key, cfg, dtype) -> Dict:
+    di, st, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    D = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    d_proj = 2 * di + 2 * st + nh
+    scale = 1.0 / math.sqrt(D)
+    return {
+        "ln": jnp.ones((D,), dtype),
+        "in_proj": (jax.random.normal(k1, (D, d_proj)) * scale).astype(dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, di + 2 * st))
+                   * 0.5).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": (jax.random.normal(k3, (di, D)) * scale).astype(dtype),
+    }

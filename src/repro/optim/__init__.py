@@ -1,0 +1,2 @@
+from .adamw import (AdamWConfig, AdamWState, adamw_init, adamw_update,
+                    global_norm, schedule_lr)

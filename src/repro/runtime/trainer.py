@@ -1,0 +1,152 @@
+"""Fault-tolerant training runtime.
+
+Production posture on a 1000+-node fleet, scaled to this container:
+
+* checkpoint/restart — atomic sharded checkpoints (repro.checkpoint), async
+  save off the critical path, deterministic O(1) data resume (repro.data);
+* failure handling — ``failure_rate`` injects SimulatedFailure at step
+  boundaries; the driver restores the latest checkpoint and replays.  The
+  restart-equivalence test asserts bit-identical final params vs an
+  uninterrupted run;
+* preemption — SIGTERM triggers a final synchronous save before exit;
+* straggler response — when step time drifts >10 % above its running mean
+  (the paper's ExhaustiveSel LIB-re-trigger rule), the autotuner's selector
+  re-opens exploration so a new plan can be chosen;
+* elastic restart — restore() re-places shards onto whatever mesh the
+  relaunched job has (repro.checkpoint elastic path).
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..configs.base import ModelConfig
+from ..data.pipeline import DataConfig, TokenPipeline
+from ..distributed.autotune import StepAutoTuner
+from ..models.model import init_params
+from ..optim.adamw import AdamWConfig, adamw_init
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class TrainerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 25
+    async_ckpt: bool = True
+    failure_rate: float = 0.0        # P(node failure) per step (injected)
+    failure_seed: int = 1234
+    max_restarts: int = 10
+    straggler_threshold: float = 1.10
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, opt_cfg: AdamWConfig,
+                 data_cfg: DataConfig, tcfg: TrainerConfig,
+                 step_fn: Optional[Callable] = None,
+                 autotuner: Optional[StepAutoTuner] = None,
+                 seed: int = 0):
+        assert (step_fn is None) != (autotuner is None), \
+            "exactly one of step_fn / autotuner"
+        self.cfg, self.opt_cfg, self.data_cfg, self.tcfg = (
+            cfg, opt_cfg, data_cfg, tcfg)
+        self.step_fn = jax.jit(step_fn) if step_fn is not None else None
+        self.autotuner = autotuner
+        self.pipeline = TokenPipeline(data_cfg)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir)
+        self.seed = seed
+        self.metrics_log: List[Dict] = []
+        self._preempted = False
+        self._restarts = 0
+        self._fail_rng = np.random.default_rng(tcfg.failure_seed)
+
+    # -- lifecycle -------------------------------------------------------------
+    def _init_state(self):
+        params = init_params(self.cfg, jax.random.PRNGKey(self.seed))
+        opt = adamw_init(params, self.opt_cfg)
+        return params, opt
+
+    def _restore_or_init(self):
+        latest = self.ckpt.latest_step()
+        params, opt = self._init_state()
+        if latest is None:
+            return 0, params, opt
+        state = self.ckpt.restore(latest, {"params": params, "opt": opt})
+        return latest, state["params"], state["opt"]
+
+    def install_preemption_handler(self):
+        def handler(signum, frame):
+            self._preempted = True
+        signal.signal(signal.SIGTERM, handler)
+
+    # -- training ---------------------------------------------------------------
+    def train(self, n_steps: int) -> Dict:
+        start, params, opt = self._restore_or_init()
+        step = start
+        step_times: List[float] = []
+        while step < n_steps:
+            try:
+                batch = {k: jax.numpy.asarray(v)
+                         for k, v in self.pipeline.batch_at(step).items()}
+                if (self.tcfg.failure_rate > 0.0 and
+                        self._fail_rng.random() < self.tcfg.failure_rate):
+                    raise SimulatedFailure(f"injected node failure @ {step}")
+                t0 = time.perf_counter()
+                if self.autotuner is not None:
+                    (params, opt, metrics), plan, dt = self.autotuner.step(
+                        params, opt, batch)
+                else:
+                    params, opt, metrics = self.step_fn(params, opt, batch)
+                    jax.block_until_ready(metrics["loss"])
+                    dt = time.perf_counter() - t0
+                    plan = "fixed"
+                step_times.append(dt)
+                self._straggler_check(step_times)
+                self.metrics_log.append({
+                    "step": step, "loss": float(metrics["loss"]),
+                    "plan": plan, "time": dt})
+                step += 1
+                if step % self.tcfg.ckpt_every == 0:
+                    state = {"params": params, "opt": opt}
+                    if self.tcfg.async_ckpt:
+                        self.ckpt.async_save(step, state)
+                    else:
+                        self.ckpt.save(step, state)
+                if self._preempted:
+                    break
+            except SimulatedFailure:
+                self._restarts += 1
+                if self._restarts > self.tcfg.max_restarts:
+                    raise
+                # relaunch path: restore latest checkpoint, replay data
+                self.ckpt.wait()
+                step, params, opt = self._restore_or_init()
+        self.ckpt.wait()
+        self.ckpt.save(step, {"params": params, "opt": opt})
+        return {"final_step": step, "params": params, "opt": opt,
+                "restarts": self._restarts,
+                "preempted": self._preempted,
+                "losses": [m["loss"] for m in self.metrics_log]}
+
+    def _straggler_check(self, times: List[float]) -> None:
+        """Paper's LIB-drift rule applied to step-time drift: re-open the
+        plan search when the current step runs >10 % above the mean."""
+        if self.autotuner is None or len(times) < 5:
+            return
+        mean = float(np.mean(times[:-1]))
+        if times[-1] > self.tcfg.straggler_threshold * mean:
+            sel = self.autotuner.service._record(
+                self.autotuner.region).selector
+            if hasattr(sel, "_selected"):
+                sel._times[:] = np.inf
+                sel._phase = 0
+                sel._selected = None

@@ -1,0 +1,2 @@
+from .engine import (DispatchSimulator, ContinuousBatcher, ReplicaCostModel,
+                     WaveStats)

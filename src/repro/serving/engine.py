@@ -1,0 +1,181 @@
+"""Serving engine — the paper's technique at dispatch granularity (L3).
+
+Structure of the adaptation (DESIGN.md §2):
+
+    OpenMP threads        -> data-parallel replica groups
+    loop iterations       -> queued requests (heterogeneous token counts)
+    chunk of iterations   -> batch of requests a replica self-assigns
+    scheduling algorithm  -> the SAME 12-algorithm portfolio (repro.core)
+    loop instance         -> one dispatch wave over the pending queue
+    LIB (Eq. 8)           -> imbalance of replica busy-times per wave
+    selection methods     -> RandomSel/ExhaustiveSel/ExpertSel/QLearn/SARSA
+
+``DispatchSimulator`` runs waves through the DES engine (replica service
+time = token-count cost model measured from a real decode step or supplied
+analytically).  ``ContinuousBatcher`` is the live path: real jitted decode
+on slots, used by examples/serve driver.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core import SelectionService, make_portfolio, percent_load_imbalance
+from ..core.portfolio import make_algorithm
+from ..data.pipeline import Request
+
+
+@dataclass
+class WaveStats:
+    wave: int
+    algorithm: int
+    n_requests: int
+    makespan: float
+    lib: float
+    chunks: int
+
+
+@dataclass
+class ReplicaCostModel:
+    """Service time of a batch of requests on one replica group.
+
+    t = fixed + per_token * sum(tokens) + per_request * n
+    (calibrate per_token from a measured decode step)."""
+    fixed: float = 2e-3
+    per_token: float = 10e-6
+    per_request: float = 0.5e-3
+
+    def cost(self, tokens: np.ndarray) -> float:
+        return (self.fixed + self.per_token * float(tokens.sum())
+                + self.per_request * len(tokens))
+
+
+class DispatchSimulator:
+    """Chunk-self-scheduled request dispatch over R replica groups."""
+
+    def __init__(self, n_replicas: int, selector: str = "QLearn",
+                 reward: str = "LT", chunk_param: int = 0, seed: int = 0,
+                 cost_model: Optional[ReplicaCostModel] = None,
+                 dispatch_overhead: float = 0.2e-3,
+                 selector_kw: Optional[dict] = None):
+        self.R = n_replicas
+        self.chunk_param = chunk_param
+        self.h = dispatch_overhead
+        self.cost = cost_model or ReplicaCostModel()
+        kw = dict(selector_kw or {})
+        kw.setdefault("seed", seed)
+        if selector.lower() in ("qlearn", "sarsa"):
+            kw.setdefault("reward_type", reward)
+        self.service = SelectionService(selector, **kw)
+        self.stats: List[WaveStats] = []
+        self._replica_free = np.zeros(n_replicas)
+
+    def run_wave(self, requests: List[Request], wave_id: int = 0
+                 ) -> WaveStats:
+        """One loop instance: dispatch all pending requests with the selected
+        scheduling algorithm; replicas self-assign request-chunks."""
+        alg_idx = self.service.begin("dispatch")
+        tokens = np.array([r.prompt_len + r.gen_len for r in requests])
+        N = len(tokens)
+        alg = make_algorithm(alg_idx)
+        alg.reset(N, self.R, self.chunk_param)
+
+        free = self._replica_free - self._replica_free.min()
+        cursor = 0
+        chunks = 0
+        if alg_idx == 0 and self.chunk_param <= 0:
+            bounds = np.linspace(0, N, self.R + 1).round().astype(int)
+            for r in range(self.R):
+                if bounds[r + 1] > bounds[r]:
+                    free[r] += self.cost.cost(tokens[bounds[r]:bounds[r + 1]])
+            chunks = self.R
+        else:
+            while alg.remaining > 0:
+                r = int(np.argmin(free))
+                c = alg.next_chunk(r)
+                if c <= 0:
+                    break
+                batch = tokens[cursor:cursor + c]
+                cursor += c
+                dt = self.cost.cost(batch)
+                alg.report(r, c, dt, dt + self.h)
+                free[r] += self.h + dt
+                chunks += 1
+
+        makespan = float(free.max())
+        lib = percent_load_imbalance(free)
+        self.service.end("dispatch", alg_idx, makespan, lib)
+        self._replica_free = free
+        st = WaveStats(wave=wave_id, algorithm=alg_idx, n_requests=N,
+                       makespan=makespan, lib=lib, chunks=chunks)
+        self.stats.append(st)
+        return st
+
+    def run(self, requests: List[Request], wave_size: int = 256
+            ) -> List[WaveStats]:
+        out = []
+        for w, i in enumerate(range(0, len(requests), wave_size)):
+            out.append(self.run_wave(requests[i:i + wave_size], w))
+        return out
+
+    def summary(self) -> Dict[str, float]:
+        mk = np.array([s.makespan for s in self.stats])
+        lib = np.array([s.lib for s in self.stats])
+        return {"total_makespan": float(mk.sum()),
+                "mean_lib": float(lib.mean()),
+                "waves": len(self.stats)}
+
+
+class ContinuousBatcher:
+    """Live continuous batching over a real jitted decode step (single
+    replica group; the examples drive this with a reduced model)."""
+
+    def __init__(self, serve_step, init_cache_fn, batch_slots: int,
+                 eos_check: Optional[Callable] = None):
+        self.serve_step = serve_step
+        self.init_cache_fn = init_cache_fn
+        self.slots = batch_slots
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self.remaining = np.zeros(batch_slots, np.int64)
+        self.queue: List[Request] = []
+        self.completed: List[Tuple[int, float]] = []
+        self.tokens_out = 0
+
+    def submit(self, requests: List[Request]):
+        self.queue.extend(requests)
+
+    def _refill(self):
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                r = self.queue.pop(0)
+                self.active[i] = r
+                self.remaining[i] = r.gen_len
+
+    def run(self, params, cache, tokens, max_steps: int = 1000):
+        """Decode until queue + slots drain (or max_steps)."""
+        import jax
+        steps = 0
+        t0 = time.perf_counter()
+        self._refill()
+        while steps < max_steps and any(a is not None for a in self.active):
+            logits, cache = self.serve_step(params, cache, tokens)
+            tokens = logits.argmax(-1).astype(tokens.dtype)
+            steps += 1
+            self.tokens_out += int(sum(a is not None for a in self.active))
+            for i, a in enumerate(self.active):
+                if a is None:
+                    continue
+                self.remaining[i] -= 1
+                if self.remaining[i] <= 0:
+                    self.completed.append((a.rid, time.perf_counter() - t0))
+                    self.active[i] = None
+            self._refill()
+        jax.block_until_ready(cache)
+        dt = time.perf_counter() - t0
+        return {"steps": steps, "tokens": self.tokens_out,
+                "tokens_per_s": self.tokens_out / max(dt, 1e-9),
+                "completed": len(self.completed), "wall": dt}

@@ -1,0 +1,17 @@
+"""repro.sim — discrete-event simulator of the paper's experiment campaign."""
+
+from .systems import SYSTEMS, SystemModel, get_system
+from .workloads import APPLICATIONS, Application, LoopProfile, get_application
+from .engine import InstanceResult, run_instance
+from .campaign import (CampaignResult, FixedRun, PortfolioSweep, SelectorRun,
+                       run_campaign_cell, run_fixed, run_selector,
+                       sweep_portfolio, chunk_param_for, CHUNK_MODES,
+                       SELECTOR_GRID)
+
+__all__ = [
+    "SYSTEMS", "SystemModel", "get_system", "APPLICATIONS", "Application",
+    "LoopProfile", "get_application", "InstanceResult", "run_instance",
+    "CampaignResult", "FixedRun", "PortfolioSweep", "SelectorRun",
+    "run_campaign_cell", "run_fixed", "run_selector", "sweep_portfolio",
+    "chunk_param_for", "CHUNK_MODES", "SELECTOR_GRID",
+]

@@ -1,0 +1,232 @@
+"""Factorial experiment campaign (paper §4.1, Table 2).
+
+Drives the DES over {applications} x {systems} x {scheduling algorithms |
+selection methods} x {chunk parameter: default | expChunk} x {RL reward: LT |
+LIB}, computes the Oracle (per-loop, per-time-step best over all algorithm x
+chunk combinations) and the performance-degradation table of Fig. 5, the
+c.o.v. of Fig. 4, and the selection traces of Figs. 7-8.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core import (ALGORITHM_NAMES, N_ALGORITHMS, SelectionService,
+                    coefficient_of_variation, exp_chunk, make_selector)
+from .engine import run_instance
+from .systems import SYSTEMS, SystemModel, get_system
+from .workloads import APPLICATIONS, Application, get_application
+
+CHUNK_MODES = ("default", "expChunk")
+
+
+def chunk_param_for(mode: str, N: int, P: int) -> int:
+    if mode == "default":
+        return 0
+    if mode == "expChunk":
+        return exp_chunk(N, P)
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# fixed-algorithm runs (portfolio sweep → Oracle, c.o.v.)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FixedRun:
+    """Median per-time-step loop times for one (alg, chunk_mode)."""
+    times: np.ndarray          # (T, n_loops) medians over reps
+    libs: np.ndarray           # (T, n_loops)
+
+    @property
+    def total(self) -> float:
+        return float(self.times.sum())
+
+
+def run_fixed(app: Application, system: SystemModel, alg: int,
+              chunk_mode: str, T: Optional[int] = None, reps: int = 3,
+              seed: int = 0) -> FixedRun:
+    T = T or app.T
+    # time-invariant apps: simulate a window and tile (median statistics are
+    # identical across steps; saves orders of magnitude of DES time)
+    T_sim = min(T, 24) if app.time_invariant else T
+    n_loops = len(app.loop_names)
+    times = np.zeros((T_sim, n_loops))
+    libs = np.zeros((T_sim, n_loops))
+    for t in range(T_sim):
+        for li, profile in enumerate(app.loops(t)):
+            cp = chunk_param_for(chunk_mode, profile.N, system.P)
+            samples = []
+            for r in range(reps):
+                rng = np.random.default_rng(
+                    (seed, hash(app.name) & 0xFFFF, system.P, alg,
+                     hash(chunk_mode) & 0xFFFF, t, r))
+                res = run_instance(profile, system, alg, cp, rng)
+                samples.append((res.loop_time, res.lib))
+            lt = float(np.median([s[0] for s in samples]))
+            lb = float(np.median([s[1] for s in samples]))
+            times[t, li], libs[t, li] = lt, lb
+    if T_sim < T:
+        reps_needed = -(-T // T_sim)
+        times = np.tile(times, (reps_needed, 1))[:T]
+        libs = np.tile(libs, (reps_needed, 1))[:T]
+    return FixedRun(times=times, libs=libs)
+
+
+@dataclass
+class PortfolioSweep:
+    """All 12 algorithms x 2 chunk modes for one app-system pair."""
+    app: str
+    system: str
+    runs: Dict[Tuple[int, str], FixedRun]
+
+    def oracle_times(self) -> np.ndarray:
+        """(T, n_loops) per-loop per-step best over the whole sweep (§3.3)."""
+        stack = np.stack([r.times for r in self.runs.values()])
+        return stack.min(axis=0)
+
+    def oracle_total(self) -> float:
+        return float(self.oracle_times().sum())
+
+    def oracle_best_fn(self, loop_index: int = 0):
+        """Per-step best algorithm index (default chunk-mode-agnostic)."""
+        keys = list(self.runs.keys())
+        stack = np.stack([self.runs[k].times[:, loop_index] for k in keys])
+        arg = stack.argmin(axis=0)
+        return lambda t: keys[arg[min(t, len(arg) - 1)]][0]
+
+    def cov(self) -> float:
+        """Fig. 4: c.o.v. of loop execution time over every algorithm and
+        chunk parameter."""
+        totals = np.array([r.total for r in self.runs.values()])
+        return coefficient_of_variation(totals)
+
+
+def sweep_portfolio(app_name: str, system_name: str, T: Optional[int] = None,
+                    reps: int = 3, seed: int = 0) -> PortfolioSweep:
+    app = get_application(app_name)
+    system = get_system(system_name)
+    runs = {}
+    for alg in range(N_ALGORITHMS):
+        for mode in CHUNK_MODES:
+            runs[(alg, mode)] = run_fixed(app, system, alg, mode, T=T,
+                                          reps=reps, seed=seed)
+    return PortfolioSweep(app=app_name, system=system_name, runs=runs)
+
+
+# ---------------------------------------------------------------------------
+# selector runs
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SelectorRun:
+    selector: str
+    chunk_mode: str
+    reward: Optional[str]
+    total: float
+    #: per loop name: list of (chosen alg, loop_time, lib) per time-step
+    history: Dict[str, List[Tuple[int, float, float]]]
+
+    def selection_shares(self, loop: Optional[str] = None) -> Dict[str, float]:
+        """Fig. 7/8 pie charts: fraction of instances per selected algorithm."""
+        hists = ([self.history[loop]] if loop else list(self.history.values()))
+        counts = np.zeros(N_ALGORITHMS)
+        for h in hists:
+            for a, _, _ in h:
+                counts[a] += 1
+        tot = counts.sum() or 1.0
+        return {ALGORITHM_NAMES[i]: counts[i] / tot
+                for i in range(N_ALGORITHMS) if counts[i] > 0}
+
+
+def run_selector(app_name: str, system_name: str, selector: str,
+                 chunk_mode: str = "default", reward: Optional[str] = None,
+                 T: Optional[int] = None, seed: int = 0,
+                 sweep: Optional[PortfolioSweep] = None) -> SelectorRun:
+    """Execute one selection method over the full time-stepped application.
+    Every modified loop gets an independent selector via SelectionService
+    (LB4OMP loop ids).  ``sweep`` is required for selector='Oracle'."""
+    app = get_application(app_name)
+    system = get_system(system_name)
+    T = T or app.T
+
+    kw: Dict = {"seed": seed}
+    if reward is not None:
+        kw["reward_type"] = reward
+    if selector.lower() == "oracle":
+        assert sweep is not None, "Oracle needs a portfolio sweep"
+        service = None
+        best_fns = {nm: sweep.oracle_best_fn(li)
+                    for li, nm in enumerate(app.loop_names)}
+        oracle_t = {nm: 0 for nm in app.loop_names}
+    else:
+        service = SelectionService(selector, **kw)
+
+    history: Dict[str, List[Tuple[int, float, float]]] = {
+        nm: [] for nm in app.loop_names}
+    rng = np.random.default_rng((seed, hash(app_name) & 0xFFFF, system.P,
+                                 hash(selector) & 0xFFFF,
+                                 hash(chunk_mode) & 0xFFFF))
+    total = 0.0
+    for t in range(T):
+        for li, profile in enumerate(app.loops(t)):
+            nm = app.loop_names[li]
+            cp = chunk_param_for(chunk_mode, profile.N, system.P)
+            if service is None:
+                a = best_fns[nm](oracle_t[nm])
+                oracle_t[nm] += 1
+            else:
+                a = service.begin(nm)
+            res = run_instance(profile, system, a, cp, rng)
+            if service is not None:
+                service.end(nm, a, res.loop_time, res.lib)
+            history[nm].append((a, res.loop_time, res.lib))
+            total += res.loop_time
+    return SelectorRun(selector=selector, chunk_mode=chunk_mode,
+                       reward=reward, total=total, history=history)
+
+
+# ---------------------------------------------------------------------------
+# the full factorial campaign (Fig. 5)
+# ---------------------------------------------------------------------------
+
+SELECTOR_GRID: List[Tuple[str, Optional[str]]] = [
+    ("RandomSel", None), ("ExhaustiveSel", None), ("ExpertSel", None),
+    ("QLearn", "LT"), ("QLearn", "LIB"), ("SARSA", "LT"), ("SARSA", "LIB"),
+]
+
+
+@dataclass
+class CampaignResult:
+    app: str
+    system: str
+    sweep: PortfolioSweep
+    oracle_total: float
+    selector_runs: Dict[Tuple[str, str, Optional[str]], SelectorRun]
+
+    def degradation(self) -> Dict[Tuple[str, str, Optional[str]], float]:
+        """Fig. 5 cells: (T_method - T_oracle) / T_oracle * 100."""
+        return {k: (r.total - self.oracle_total) / self.oracle_total * 100.0
+                for k, r in self.selector_runs.items()}
+
+
+def run_campaign_cell(app_name: str, system_name: str,
+                      T: Optional[int] = None, reps: int = 3,
+                      seed: int = 0,
+                      selectors=SELECTOR_GRID,
+                      chunk_modes=CHUNK_MODES) -> CampaignResult:
+    sweep = sweep_portfolio(app_name, system_name, T=T, reps=reps, seed=seed)
+    T_eff = T or get_application(app_name).T
+    runs = {}
+    for mode in chunk_modes:
+        for sel, reward in selectors:
+            runs[(sel, mode, reward)] = run_selector(
+                app_name, system_name, sel, chunk_mode=mode, reward=reward,
+                T=T_eff, seed=seed, sweep=sweep)
+    oracle_total = float(sweep.oracle_times()[:T_eff].sum())
+    return CampaignResult(app=app_name, system=system_name, sweep=sweep,
+                          oracle_total=oracle_total, selector_runs=runs)

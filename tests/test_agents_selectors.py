@@ -1,0 +1,182 @@
+"""RL agents (Q-Learn / SARSA), Eq. 11 rewards, explore-first policy, and
+the expert-based selectors."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ALGORITHM_NAMES, N_ALGORITHMS, ExhaustiveSel,
+                        QLearnAgent, RandomSel, RewardTracker, SarsaAgent,
+                        SelectionService, explore_first_sequence,
+                        make_selector, REWARD_POSITIVE, REWARD_NEUTRAL,
+                        REWARD_NEGATIVE)
+
+
+# ---------------------------------------------------------------------------
+# explore-first
+# ---------------------------------------------------------------------------
+
+def test_explore_first_covers_all_144_pairs():
+    seq = explore_first_sequence(12, start=0)
+    assert len(seq) == 144                     # paper: 144 learning instances
+    pairs = set()
+    s = 0
+    for a in seq:
+        pairs.add((s, a))
+        s = a
+    assert len(pairs) == 144                   # every (state, action) once
+
+
+@given(n=st.integers(2, 16), start=st.integers(0, 5))
+@settings(max_examples=20, deadline=None)
+def test_explore_first_eulerian_any_n(n, start):
+    start = start % n
+    seq = explore_first_sequence(n, start=start)
+    assert len(seq) == n * n
+    s, pairs = start, set()
+    for a in seq:
+        pairs.add((s, a))
+        s = a
+    assert len(pairs) == n * n
+
+
+# ---------------------------------------------------------------------------
+# Eq. 11 reward
+# ---------------------------------------------------------------------------
+
+def test_reward_eq11():
+    rt = RewardTracker()
+    assert rt.reward(10.0) == REWARD_POSITIVE      # first observation
+    assert rt.reward(5.0) == REWARD_POSITIVE       # new min
+    assert rt.reward(7.0) == REWARD_NEUTRAL        # between extrema
+    assert rt.reward(10.0) == REWARD_NEGATIVE      # >= max
+    assert rt.reward(5.0) == REWARD_POSITIVE       # == min -> positive
+    assert rt.reward(100.0) == REWARD_NEGATIVE
+
+
+def test_reward_values_match_paper():
+    assert REWARD_POSITIVE == 0.01   # distinguishable from 0-initialized Q
+    assert REWARD_NEUTRAL == -2.0
+    assert REWARD_NEGATIVE == -4.0
+
+
+# ---------------------------------------------------------------------------
+# agents
+# ---------------------------------------------------------------------------
+
+def run_bandit(agent_cls, best=3, T=400, noise=0.0, seed=0, spread=1.0):
+    sel = agent_cls()
+    rng = np.random.default_rng(seed)
+    for _ in range(T):
+        a = sel.select()
+        x = 1.0 + spread * abs(a - best) + rng.normal(0, noise)
+        sel.observe(a, x)
+    return sel
+
+
+def test_qlearn_defaults_match_paper():
+    a = QLearnAgent()
+    assert a.alpha == 0.5 and a.gamma == 0.5 and a.alpha_decay == 0.05
+    assert a.q.shape == (12, 12)
+    assert (a.q == 0).all()
+    assert a.learning_steps == 144
+
+
+def test_qlearn_learning_phase_is_144():
+    a = QLearnAgent()
+    for t in range(144):
+        assert a.learning
+        act = a.select()
+        a.observe(act, 1.0)
+    assert not a.learning
+
+
+def test_qlearn_finds_strong_optimum():
+    """With order-of-magnitude gaps (the paper's STREAM case), Q-Learn
+    selects the best algorithm after the learning phase (claim C1)."""
+    sel = run_bandit(QLearnAgent, best=5, T=300, noise=0.0, spread=50.0)
+    assert sel.select() == 5
+
+
+def test_sarsa_update_rule():
+    a = SarsaAgent(n_actions=3)
+    # force deterministic single update
+    a._explore = [1, 2]
+    a.state = 0
+    act = a.select()
+    assert act == 1
+    a.observe(1, 100.0)   # first obs -> r+ = 0.01; bootstrap Q(1, 2) = 0
+    assert a.q[0, 1] == pytest.approx(0.5 * 0.01)
+
+
+def test_qlearn_update_rule():
+    a = QLearnAgent(n_actions=3)
+    a._explore = [1, 2]
+    a.state = 0
+    a.q[1, 0] = 7.0   # max bootstrap source
+    a.observe(1, 50.0)
+    assert a.q[0, 1] == pytest.approx(0.5 * (0.01 + 0.5 * 7.0))
+
+
+def test_alpha_decay_after_learning():
+    a = QLearnAgent(n_actions=2)   # learning = 4 steps
+    for _ in range(4):
+        a.observe(a.select(), 1.0)
+    assert a.alpha == 0.5
+    a.observe(a.select(), 1.0)
+    assert a.alpha == pytest.approx(0.45)
+
+
+# ---------------------------------------------------------------------------
+# expert selectors
+# ---------------------------------------------------------------------------
+
+def test_exhaustive_selects_argmin_and_retriggers():
+    sel = ExhaustiveSel()
+    for t in range(12):
+        a = sel.select()
+        assert a == t                      # portfolio order
+        sel.observe(a, 1.0 + 0.1 * abs(a - 4), lib=3.0)
+    assert sel.select() == 4
+    # stable LIB: stays
+    for _ in range(5):
+        sel.observe(sel.select(), 1.0, lib=10.0)
+    assert sel.select() == 4
+    # big LIB drift: re-triggers the search
+    sel.observe(sel.select(), 1.0, lib=50.0)
+    assert sel.select() == 0
+
+
+def test_randomsel_jump_probability():
+    sel = RandomSel(seed=0)
+    sel.observe(0, 1.0, lib=0.0)       # P_j = 0 -> never jump
+    picks = {sel.select() for _ in range(20)}
+    assert len(picks) == 1
+    sel.observe(0, 1.0, lib=50.0)      # P_j = 5 > 1 -> always jump
+    picks = [sel.select() for _ in range(50)]
+    assert len(set(picks)) > 3
+
+
+def test_expertsel_moves_toward_adaptive_under_imbalance():
+    sel = make_selector("expert")
+    assert sel.select() == 0           # DLS_0 = STATIC first
+    sel.observe(0, 1.0, lib=80.0)      # severe imbalance
+    assert sel.select() >= 7           # jumps to the adaptive end
+
+
+def test_selection_service_isolates_loops():
+    svc = SelectionService("qlearn", reward_type="LT")
+    a0 = svc.begin("L0")
+    svc.end("L0", a0, 1.0, 0.0)
+    a1 = svc.begin("L1")
+    assert len(svc.history("L0")) == 1
+    assert len(svc.history("L1")) == 0
+    assert set(svc.regions) == {"L0", "L1"}
+
+
+def test_selector_generalizes_to_plan_portfolios():
+    sel = make_selector("exhaustive", n_actions=5)
+    for t in range(5):
+        a = sel.select()
+        sel.observe(a, 1.0 + abs(a - 2), 0.0)
+    assert sel.select() == 2

@@ -1,0 +1,97 @@
+"""Beyond-paper extensions: Q-table warm starting (the paper's suggested
+'eliminate the learning phase' path) and the jitted DES variant."""
+
+import numpy as np
+import pytest
+
+from repro.core import QLearnAgent, SarsaAgent
+from repro.core.persistence import (AgentStatsLogger, load_agent, save_agent,
+                                    warm_start)
+
+
+# ---------------------------------------------------------------------------
+# Q-table persistence / warm start
+# ---------------------------------------------------------------------------
+
+def _train_agent(best=5, T=300, spread=50.0):
+    a = QLearnAgent()
+    rng = np.random.default_rng(0)
+    for _ in range(T):
+        act = a.select()
+        a.observe(act, 1.0 + spread * abs(act - best))
+    return a
+
+
+def test_save_load_roundtrip(tmp_path):
+    a = _train_agent()
+    save_agent(a, str(tmp_path), "gravity", system="cascadelake")
+    rec = load_agent(str(tmp_path), "gravity", system="cascadelake")
+    assert rec["kind"] == "QLearnAgent"
+    np.testing.assert_allclose(np.asarray(rec["q"]), a.q)
+    assert load_agent(str(tmp_path), "gravity", system="epyc") is None
+
+
+def test_warm_start_skips_learning_phase(tmp_path):
+    trained = _train_agent(best=5)
+    save_agent(trained, str(tmp_path), "L0")
+    fresh = QLearnAgent()
+    assert fresh.learning                       # would pay 144 instances
+    rec = load_agent(str(tmp_path), "L0")
+    warm_start(fresh, rec)
+    assert not fresh.learning                   # paper's 28.8 % cost -> 0
+    assert fresh.select() == 5                  # immediately exploits
+
+
+def test_warm_start_keeps_reward_extrema(tmp_path):
+    trained = _train_agent()
+    save_agent(trained, str(tmp_path), "L0")
+    fresh = QLearnAgent()
+    warm_start(fresh, load_agent(str(tmp_path), "L0"))
+    lo, hi = fresh.reward.extrema
+    assert np.isfinite(lo) and np.isfinite(hi) and lo < hi
+
+
+def test_stats_logger(tmp_path):
+    a = QLearnAgent(n_actions=3)
+    log = AgentStatsLogger(str(tmp_path))
+    for t in range(4):
+        act = a.select()
+        a.observe(act, 1.0)
+        log.log("L0", t, a)
+    lines = open(tmp_path / "L0.jsonl").read().strip().splitlines()
+    assert len(lines) == 4
+    import json
+    rec = json.loads(lines[-1])
+    assert np.asarray(rec["q"]).shape == (3, 3)
+
+
+# ---------------------------------------------------------------------------
+# jitted DES cross-validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("alg", [1, 2, 3, 4, 6])
+def test_engine_jax_matches_python(alg):
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.sim import get_application, get_system, run_instance
+    from repro.sim.engine_jax import simulate_loop
+
+    app = get_application("mandelbrot")
+    system = get_system("broadwell")
+    profile = app.loops(0)[0]
+
+    # noise-free python reference: zero jitter/noise/overheads except h
+    quiet = dataclasses.replace(system, noise_sigma=0.0, jitter=0.0,
+                                speed_spread=0.0, boundary_cost=0.0,
+                                dyn_locality=0.0, loc_amp=0.0)
+    rng = np.random.default_rng(0)
+    ref = run_instance(profile, quiet, alg, 64, rng)
+
+    mk, finish, count = simulate_loop(
+        alg, jnp.asarray(profile.prefix_grid, jnp.float32),
+        profile.N, quiet.P, 64, h=quiet.h)
+    assert int(count) == ref.n_chunks
+    # same scheduling decisions -> same makespan (float32 tolerance)
+    np.testing.assert_allclose(float(mk), ref.loop_time, rtol=2e-3)

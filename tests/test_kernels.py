@@ -1,0 +1,111 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 128), (3, 17, 64), (2, 5, 9, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, shape, dtype)
+    w = jax.random.normal(k2, shape[-1:], dtype)
+    out = ops.rmsnorm(x, w, block_rows=16)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,T,H,K,hd", [
+    (1, 128, 128, 4, 4, 64),     # MHA square
+    (2, 96, 160, 8, 2, 32),      # GQA, ragged lengths, padding path
+    (1, 257, 129, 6, 3, 64),     # non-multiple-of-block sizes
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, T, H, K, hd, causal, dtype):
+    if causal and S > T:
+        pytest.skip("causal with S>T undefined in this harness")
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, T, K, hd), dtype)
+    v = jax.random.normal(ks[2], (B, T, K, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_kv=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_flash_matches_model_chunked_attention():
+    from repro.models.layers import chunked_attention
+    ks = jax.random.split(KEY, 3)
+    B, S, H, K, hd = 2, 256, 8, 4, 32
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    a = ops.flash_attention(q, k, v, causal=True, block_q=64, block_kv=64)
+    b = chunked_attention(q, k, v, causal=True, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4,
+                               atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,S,nh,hp,st,chunk,hb", [
+    (1, 64, 4, 32, 16, 16, 4),
+    (2, 128, 8, 32, 16, 32, 4),
+    (1, 96, 6, 16, 8, 32, 2),    # S not multiple of 64; nh=6 hb=2
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_sweep(b, S, nh, hp, st, chunk, hb, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = (jax.random.normal(ks[0], (b, S, nh, hp)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, nh))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    B = (jax.random.normal(ks[3], (b, S, st)) * 0.5).astype(dtype)
+    C = (jax.random.normal(ks[4], (b, S, st)) * 0.5).astype(dtype)
+    y, h = ops.ssd_scan(x, dt, A, B, C, chunk=chunk, head_block=hb)
+    y_ref, h_ref = ref.ssd_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 5e-4,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 5e-4)
+
+
+def test_ssd_kernel_matches_model_path():
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(KEY, 5)
+    b, S, nh, hp, st = 2, 128, 4, 32, 16
+    x = jax.random.normal(ks[0], (b, S, nh, hp)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, nh))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, S, st)) * 0.5
+    C = jax.random.normal(ks[4], (b, S, st)) * 0.5
+    y1, h1 = ops.ssd_scan(x, dt, A, B, C, chunk=32, head_block=4)
+    y2, h2 = ssd_chunked(x, dt, A, B, C, 32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=5e-4,
+                               atol=5e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=5e-4,
+                               atol=5e-4)

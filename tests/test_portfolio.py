@@ -1,0 +1,138 @@
+"""Unit + property tests for the 12-algorithm scheduling portfolio."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ALGORITHM_NAMES, N_ALGORITHMS, alg_index,
+                        apply_chunk_floor, exp_chunk, make_algorithm)
+from repro.core.jaxsched import chunk_schedule
+
+
+def drain(alg_idx, N, P, chunk_param, report=True):
+    alg = make_algorithm(alg_idx)
+    alg.reset(N, P, chunk_param)
+    sizes = []
+    pe = 0
+    while True:
+        c = alg.next_chunk(pe % P)
+        if c == 0:
+            break
+        if report:
+            alg.report(pe % P, c, c * 1e-6, c * 1e-6 + 1e-7)
+        sizes.append(c)
+        pe += 1
+        assert len(sizes) <= N + P, "non-termination"
+    return sizes
+
+
+# ---------------------------------------------------------------------------
+# exact paper anchors
+# ---------------------------------------------------------------------------
+
+def test_exp_chunk_reproduces_paper_781():
+    # Figs. 1-2: N = 1e6, P = 20 with chunk parameters 781 (= N/(2^6 * 20))
+    assert exp_chunk(1_000_000, 20) == 781
+
+
+def test_portfolio_order_matches_table2():
+    assert ALGORITHM_NAMES == ["STATIC", "SS", "GSS", "AutoLLVM", "TSS",
+                               "StaticSteal", "mFAC2", "AWF_B", "AWF_C",
+                               "AWF_D", "AWF_E", "mAF"]
+
+
+def test_gss_follows_eq3():
+    # Cs_i = ceil(R_i / P)
+    sizes = drain(alg_index("GSS"), 1000, 4, 0)
+    R = 1000
+    for c in sizes:
+        assert c == -(-R // 4)
+        R -= c
+
+
+def test_ss_is_unit_chunks():
+    sizes = drain(alg_index("SS"), 100, 4, 0)
+    assert sizes == [1] * 100
+
+
+def test_tss_first_chunk_is_n_over_2p():
+    sizes = drain(alg_index("TSS"), 10_000, 8, 0)
+    assert sizes[0] == 625  # N/(2P)
+    assert all(a >= b for a, b in zip(sizes[:-1], sizes[1:]))  # linear decrease
+
+
+def test_mfac2_halves_batches():
+    P = 4
+    sizes = drain(alg_index("mFAC2"), 1024, P, 0)
+    # batch j: P chunks of ceil(R_j / 2P): 128,128,128,128, 64,...
+    assert sizes[:4] == [128] * 4
+    assert sizes[4:8] == [64] * 4
+
+
+def test_static_chunk_param_direct():
+    sizes = drain(alg_index("STATIC"), 100, 4, 30)
+    assert sizes == [30, 30, 30, 10]
+
+
+def test_chunk_floor_semantics():
+    # non-direct algorithms: delivered = max(alg, user), clipped by remaining
+    assert apply_chunk_floor(2, 5, 20, 1000) == 20
+    assert apply_chunk_floor(2, 50, 20, 1000) == 50
+    assert apply_chunk_floor(2, 50, 20, 30) == 30
+    # SS: user chunk is direct
+    assert apply_chunk_floor(1, 1, 64, 1000) == 64
+
+
+# ---------------------------------------------------------------------------
+# properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(alg=st.integers(0, N_ALGORITHMS - 1),
+       N=st.integers(1, 5000),
+       P=st.integers(1, 32),
+       chunk=st.sampled_from([0, 1, 7, 64]))
+def test_work_conservation(alg, N, P, chunk):
+    """Every algorithm delivers exactly N iterations, all chunks >= 1."""
+    sizes = drain(alg, N, P, chunk)
+    assert sum(sizes) == N
+    assert all(c >= 1 for c in sizes)
+
+
+@settings(max_examples=20, deadline=None)
+@given(N=st.integers(100, 20000), P=st.integers(2, 16))
+def test_nonadaptive_decreasing(N, P):
+    """GSS/TSS/mFAC2 chunk sizes never increase (non-adaptive monotonicity)."""
+    for name in ("GSS", "TSS", "mFAC2"):
+        sizes = drain(alg_index(name), N, P, 0)
+        assert all(a >= b for a, b in zip(sizes[:-1], sizes[1:])), name
+
+
+@settings(max_examples=20, deadline=None)
+@given(N=st.integers(10, 2000), P=st.integers(1, 8),
+       chunk=st.integers(1, 50))
+def test_floor_respected(N, P, chunk):
+    """With a chunk parameter, every chunk except possibly the last is
+    >= chunk (GSS: threshold semantics)."""
+    sizes = drain(alg_index("GSS"), N, P, chunk)
+    assert all(c >= min(chunk, N) for c in sizes[:-1])
+    assert sum(sizes) == N
+
+
+@settings(max_examples=15, deadline=None)
+@given(N=st.integers(16, 4096), P=st.integers(1, 16),
+       chunk=st.sampled_from([0, 8]),
+       alg=st.sampled_from([0, 1, 2, 3, 6]))
+def test_jax_schedule_matches_host(alg, N, P, chunk):
+    """Pure-JAX lax.while_loop schedule == host classes (non-adaptive)."""
+    sizes, count = chunk_schedule(alg, N, P, chunk, max_chunks=8192)
+    got = list(np.asarray(sizes[: int(count)]))
+    want = drain(alg, N, P, chunk, report=False)
+    assert got == want
+
+
+def test_exp_chunk_bounds():
+    for N in (100, 10_000, 2_000_000_000):
+        for P in (2, 20, 128):
+            c = exp_chunk(N, P)
+            assert 1 <= c <= max(1, N // (2 * P))
