@@ -30,7 +30,8 @@ def run(n_requests: int = 40 * 256, replicas: int = 16, seed: int = 0):
     # selection methods
     for sel, reward in [("RandomSel", None), ("ExhaustiveSel", None),
                         ("QLearn", "LT"), ("QLearn", "LIB"),
-                        ("SARSA", "LT")]:
+                        ("SARSA", "LT"), ("Hybrid", "LT"),
+                        ("Hybrid", "p95")]:
         sim = DispatchSimulator(replicas, selector=sel,
                                 reward=reward or "LT", seed=seed)
         sim.run(reqs)

@@ -1,16 +1,21 @@
-"""Quickstart: the paper's core loop in 60 lines.
+"""Quickstart: the paper's core loop on the structured selection API.
 
 1. build the 12-algorithm portfolio and inspect chunk schedules;
 2. run one simulated SPHYNX loop instance per algorithm;
-3. let Q-Learn (LT reward, explore-first) select online and compare against
-   Oracle and ExhaustiveSel.
+3. drive selection through ``SelectionService.instance`` (Decision in,
+   Observation out) and compare every method — including the §6 Hybrid
+   (expert-seeded RL) — against Oracle;
+4. persist the learned Q-table and warm-start a second service from it
+   (paper §5: the 28.8 % exploration cost drops to zero on re-runs).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import tempfile
+
 import numpy as np
 
-from repro.core import ALGORITHM_NAMES, exp_chunk, make_selector
+from repro.core import ALGORITHM_NAMES, SelectionService, exp_chunk
 from repro.sim import (get_application, get_system, run_instance,
                        run_selector, sweep_portfolio)
 
@@ -35,7 +40,8 @@ def main():
     oracle = sweep.oracle_times()[:T].sum()
     for sel, reward in [("ExhaustiveSel", None), ("ExpertSel", None),
                         ("QLearn", "LT"), ("QLearn", "LIB"),
-                        ("SARSA", "LT"), ("RandomSel", None)]:
+                        ("SARSA", "LT"), ("Hybrid", "LT"),
+                        ("Hybrid", "LT+LIB"), ("RandomSel", None)]:
         run = run_selector("sphynx", "cascadelake", sel, reward=reward,
                            chunk_mode="expChunk", T=T)
         deg = (run.total - oracle) / oracle * 100
@@ -45,6 +51,24 @@ def main():
         print(f"  {tag:15s} total={run.total:7.2f}s  vs Oracle {deg:+6.1f}%  "
               f"mostly->{top}")
     print(f"  {'Oracle':15s} total={oracle:7.2f}s")
+
+    print("\n-- warm start: persist the Q-table, skip the learning phase --")
+    store = tempfile.mkdtemp(prefix="repro_qtables_")
+    rng = np.random.default_rng(7)
+    with SelectionService("QLearn", reward="LT", store_dir=store) as svc:
+        for t in range(180):
+            with svc.instance("gravity") as inst:
+                res = run_instance(profile, system, inst.action, cp, rng)
+                inst.report(loop_time=res.loop_time, lib=res.lib)
+        cold = svc.policy("gravity")
+        print(f"  cold run : {cold.learning_steps} exploration instances, "
+              f"now exploiting {ALGORITHM_NAMES[cold.decide().action]}")
+    svc2 = SelectionService("QLearn", reward="LT", store_dir=store)
+    warm = svc2.policy("gravity")
+    d = warm.decide()
+    print(f"  warm run : restored from {store}; learning={warm.learning}, "
+          f"first decision -> {ALGORITHM_NAMES[d.action]} "
+          f"(phase={d.phase})")
 
 
 if __name__ == "__main__":

@@ -64,7 +64,8 @@ def scale_part(n_requests: int, per_tok: float):
         s = sim.summary()
         rows.append((f"fixed {ALGORITHM_NAMES[alg]}", s))
     for sel, reward in [("ExhaustiveSel", None), ("QLearn", "LT"),
-                        ("QLearn", "LIB"), ("SARSA", "LT")]:
+                        ("QLearn", "LIB"), ("SARSA", "LT"),
+                        ("Hybrid", "LT"), ("Hybrid", "p95")]:
         sim = DispatchSimulator(16, selector=sel, reward=reward or "LT",
                                 cost_model=cost)
         sim.run(reqs)

@@ -1,5 +1,6 @@
 """repro.core — the paper's contribution: scheduling-algorithm portfolio and
-automated (expert- and RL-based) selection methods."""
+automated (expert-, RL-based, and hybrid) selection through one structured
+policy API (``Observation`` / ``Decision`` / ``SelectionPolicy``)."""
 
 from .portfolio import (ALGORITHM_NAMES, N_ALGORITHMS, ADAPTIVE_SET,
                         ChunkAlgorithm, alg_index, exp_chunk,
@@ -8,22 +9,39 @@ from .metrics import (percent_load_imbalance, execution_imbalance,
                       coefficient_of_variation)
 from .rewards import (RewardTracker, REWARD_POSITIVE, REWARD_NEUTRAL,
                       REWARD_NEGATIVE, REWARD_TYPES)
+from .api import (Observation, Decision, SelectionPolicy, register_reward,
+                  get_reward, reward_names)
 from .agents import QLearnAgent, SarsaAgent, explore_first_sequence
-from .selectors import (Selector, FixedSel, OracleSel, RandomSel,
+from .selectors import (FixedPolicy, OraclePolicy, RandomPolicy,
+                        ExhaustivePolicy, ExpertPolicy, RLPolicy,
+                        QLearnPolicy, SarsaPolicy, HybridPolicy,
+                        make_policy, POLICY_NAMES,
+                        # deprecated scalar shims
+                        Selector, FixedSel, OracleSel, RandomSel,
                         ExhaustiveSel, ExpertSel, QLearnSel, SarsaSel,
                         make_selector, SELECTOR_NAMES)
-from .service import SelectionService
+from .service import RegionInstance, SelectionService
 from .persistence import (AgentStatsLogger, save_agent, load_agent,
-                          warm_start)
+                          save_policy_state, load_policy_state,
+                          system_fingerprint, warm_start)
 
 __all__ = [
     "ALGORITHM_NAMES", "N_ALGORITHMS", "ADAPTIVE_SET", "ChunkAlgorithm",
     "alg_index", "exp_chunk", "apply_chunk_floor", "make_algorithm",
     "make_portfolio", "percent_load_imbalance", "execution_imbalance",
     "coefficient_of_variation", "RewardTracker", "REWARD_POSITIVE",
-    "REWARD_NEUTRAL", "REWARD_NEGATIVE", "REWARD_TYPES", "QLearnAgent",
-    "SarsaAgent", "explore_first_sequence", "Selector", "FixedSel",
-    "OracleSel", "RandomSel", "ExhaustiveSel", "ExpertSel", "QLearnSel",
-    "SarsaSel", "make_selector", "SELECTOR_NAMES", "SelectionService",
-    "AgentStatsLogger", "save_agent", "load_agent", "warm_start",
+    "REWARD_NEUTRAL", "REWARD_NEGATIVE", "REWARD_TYPES",
+    # structured selection API
+    "Observation", "Decision", "SelectionPolicy", "register_reward",
+    "get_reward", "reward_names", "FixedPolicy", "OraclePolicy",
+    "RandomPolicy", "ExhaustivePolicy", "ExpertPolicy", "RLPolicy",
+    "QLearnPolicy", "SarsaPolicy", "HybridPolicy", "make_policy",
+    "POLICY_NAMES", "RegionInstance", "SelectionService",
+    # agents + persistence
+    "QLearnAgent", "SarsaAgent", "explore_first_sequence",
+    "AgentStatsLogger", "save_agent", "load_agent", "save_policy_state",
+    "load_policy_state", "system_fingerprint", "warm_start",
+    # deprecated scalar shims
+    "Selector", "FixedSel", "OracleSel", "RandomSel", "ExhaustiveSel",
+    "ExpertSel", "QLearnSel", "SarsaSel", "make_selector", "SELECTOR_NAMES",
 ]

@@ -116,6 +116,65 @@ class TabularAgent:
     def _bootstrap(self, s_next: int) -> float:  # pragma: no cover
         raise NotImplementedError
 
+    # -- persistence (paper §5 warm start) ------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-serializable snapshot: Q-table, reward extrema, position."""
+        lo, hi = self.reward.extrema
+        return {
+            "kind": type(self).__name__,
+            "n_actions": self.n_actions,
+            "alpha": self.alpha, "gamma": self.gamma,
+            "alpha_decay": self.alpha_decay,
+            "initial_state": int(self.initial_state),
+            "state": int(self.state),
+            "instances": self._t,
+            "q": np.asarray(self.q).tolist(),
+            "reward_min": None if not np.isfinite(lo) else lo,
+            "reward_max": None if not np.isfinite(hi) else hi,
+            "reward_count": self.reward.count,
+        }
+
+    def load_state_dict(self, rec: dict, *, skip_learning: bool = True
+                        ) -> None:
+        """Restore a ``state_dict`` snapshot.
+
+        With ``skip_learning`` (the paper-§5 warm start) the agent resumes
+        at the snapshot's instance count: a fully-trained snapshot skips the
+        whole explore-first phase (28.8 % cost → 0), while a snapshot saved
+        *mid-learning* resumes exploration where it stopped rather than
+        freezing a near-empty Q-table into greedy exploitation forever.
+        With ``skip_learning=False`` the explore-first phase is replayed
+        from scratch over the restored table."""
+        # validate everything into locals first: a truncated/hand-edited
+        # record must leave the agent untouched, not half-restored
+        q = np.asarray(rec["q"], dtype=np.float64)
+        if q.shape != self.q.shape:
+            raise ValueError(f"stored Q-table shape {q.shape} does not match "
+                             f"agent shape {self.q.shape}")
+        state = int(rec["state"])
+        alpha = float(rec["alpha"])
+        t = int(rec.get("instances", len(self._explore))) if skip_learning \
+            else 0
+        # the explore-first Eulerian circuit depends on the start node; a
+        # mid-learning snapshot must resume on the circuit it was saved on
+        initial_state = int(rec.get("initial_state", self.initial_state))
+        reward_min = rec.get("reward_min")
+        reward_max = rec.get("reward_max") if reward_min is not None else None
+        reward_count = int(rec.get("reward_count", 1))
+
+        self.q = q
+        self.state = state
+        self.alpha = alpha
+        if initial_state != self.initial_state:
+            self.initial_state = initial_state
+            self._explore = explore_first_sequence(self.n_actions,
+                                                   start=initial_state)
+        if reward_min is not None:
+            self.reward._min = reward_min
+            self.reward._max = reward_max
+            self.reward.count = reward_count
+        self._t = t
+
 
 class QLearnAgent(TabularAgent):
     """Eq. 10 — off-policy: bootstrap with max_a' Q(s', a')."""

@@ -7,22 +7,36 @@ been executed on a given system.  Thus, eliminating the learning phase of
 RL-based methods."*  This module implements exactly that:
 
 * ``AgentStatsLogger`` — per-instance Q-table snapshots (JSON-lines);
-* ``save_agent`` / ``load_agent`` — persist (Q-table, reward extrema, state);
-* ``warm_start`` — resume a Q-Learn/SARSA agent from a stored table with the
-  explore-first phase SKIPPED (the 144-instance cost drops to 0);
-* keyed by (application/region id, system fingerprint), mirroring the
-  paper's application-system pairing.
+* ``save_policy_state`` / ``load_policy_state`` — persist any
+  ``SelectionPolicy.state_dict()`` keyed by (region, system fingerprint);
+  this is what ``SelectionService(store_dir=...)`` drives automatically;
+* ``system_fingerprint`` — a stable digest of the host (the paper keys
+  warm starts by application-system *pair*);
+* ``save_agent`` / ``load_agent`` / ``warm_start`` — the original
+  agent-level helpers, now thin wrappers over
+  ``TabularAgent.state_dict()`` / ``load_state_dict()``.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import platform
+import zlib
 from typing import Dict, Optional
 
 import numpy as np
 
-from .agents import QLearnAgent, SarsaAgent, TabularAgent
+from .agents import TabularAgent
+
+
+def system_fingerprint() -> str:
+    """Stable 8-hex digest of the host: the "system" half of the paper's
+    application-system pairing.  CRC-32 (not ``hash()``) so the key is
+    identical across processes and runs."""
+    ident = "|".join((platform.machine(), platform.system(),
+                      str(os.cpu_count() or 0)))
+    return f"{zlib.crc32(ident.encode('utf-8')):08x}"
 
 
 class AgentStatsLogger:
@@ -42,30 +56,46 @@ class AgentStatsLogger:
             f.write(json.dumps(rec) + "\n")
 
 
-def _key_path(directory: str, region: str, system: str) -> str:
+def _key_path(directory: str, region: str, system: str,
+              prefix: str = "qtable") -> str:
     safe = f"{region}__{system}".replace("/", "_")
-    return os.path.join(directory, f"qtable_{safe}.json")
+    return os.path.join(directory, f"{prefix}_{safe}.json")
 
+
+# ---------------------------------------------------------------------------
+# policy-level persistence (SelectionService store_dir)
+# ---------------------------------------------------------------------------
+
+def save_policy_state(record: Dict, directory: str, region: str,
+                      system: str = "default") -> str:
+    """Write a ``{"method": ..., "state": policy.state_dict(), ...}`` record
+    keyed by (region, system)."""
+    os.makedirs(directory, exist_ok=True)
+    path = _key_path(directory, region, system, prefix="policy")
+    with open(path, "w") as f:
+        json.dump(record, f)
+    return path
+
+
+def load_policy_state(directory: str, region: str,
+                      system: str = "default") -> Optional[Dict]:
+    path = _key_path(directory, region, system, prefix="policy")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# agent-level helpers (pre-redesign surface; still supported)
+# ---------------------------------------------------------------------------
 
 def save_agent(agent: TabularAgent, directory: str, region: str,
                system: str = "default") -> str:
     os.makedirs(directory, exist_ok=True)
-    lo, hi = agent.reward.extrema
-    rec = {
-        "kind": type(agent).__name__,
-        "n_actions": agent.n_actions,
-        "alpha": agent.alpha, "gamma": agent.gamma,
-        "alpha_decay": agent.alpha_decay,
-        "state": int(agent.state),
-        "instances": agent._t,
-        "q": np.asarray(agent.q).tolist(),
-        "reward_min": None if not np.isfinite(lo) else lo,
-        "reward_max": None if not np.isfinite(hi) else hi,
-        "reward_count": agent.reward.count,
-    }
     path = _key_path(directory, region, system)
     with open(path, "w") as f:
-        json.dump(rec, f)
+        json.dump(agent.state_dict(), f)
     return path
 
 
@@ -80,18 +110,14 @@ def load_agent(directory: str, region: str, system: str = "default"
 
 def warm_start(agent: TabularAgent, rec: Dict,
                skip_learning: bool = True) -> TabularAgent:
-    """Initialize ``agent`` from a stored record.  With ``skip_learning`` the
-    explore-first phase is marked done — the paper's 28.8 % exploration cost
-    drops to zero on re-runs of a known application-system pair."""
-    q = np.asarray(rec["q"], dtype=np.float64)
-    assert q.shape == agent.q.shape, (q.shape, agent.q.shape)
-    agent.q = q
-    agent.state = int(rec["state"])
-    agent.alpha = float(rec["alpha"])
-    if rec.get("reward_min") is not None:
-        agent.reward._min = rec["reward_min"]
-        agent.reward._max = rec["reward_max"]
-        agent.reward.count = rec.get("reward_count", 1)
-    if skip_learning:
-        agent._t = max(agent._t, len(agent._explore))
+    """Initialize ``agent`` from a stored record.
+
+    With ``skip_learning`` the agent resumes at the snapshot's instance
+    count: a fully-trained record skips the explore-first phase entirely —
+    the paper's 28.8 % exploration cost drops to zero on re-runs of a known
+    application-system pair — while a record saved *mid-learning* resumes
+    exploration where it stopped (it no longer jumps straight to greedy
+    exploitation of a half-filled table).  With ``skip_learning=False`` the
+    explore-first phase is replayed from scratch over the restored table."""
+    agent.load_state_dict(rec, skip_learning=skip_learning)
     return agent

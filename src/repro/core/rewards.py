@@ -12,6 +12,12 @@ Two reward *types* feed the same three-level reward:
 min/max are running extrema over all *previously observed* instances of the
 loop.  Paper values: r+ = 0.01 (not 0, to stay distinguishable from the
 Q-table's 0 init), r0 = -2.0, r- = -4.0.
+
+The LT/LIB *signal extraction* that used to be hard-coded here is now the
+pluggable reward registry in :mod:`repro.core.api` (``@register_reward``):
+any ``Observation -> float`` (lower is better) can feed this tracker, so
+LT/LIB generalize to p95 tail latency, LT+LIB blends, throughput, etc.
+``REWARD_TYPES`` is kept for the legacy two-string surface.
 """
 
 from __future__ import annotations

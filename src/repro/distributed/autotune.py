@@ -6,9 +6,9 @@ repeatedly-executed jitted step: activation-checkpoint policy, microbatch
 count, attention implementation, sharding strategy, gradient compression.
 
 ``StepAutoTuner`` holds a portfolio of plans, compiles them lazily, and
-drives any of the paper's selection methods (explore-first Q-Learn / SARSA
-with the Eq. 11 reward, ExhaustiveSel with its LIB re-trigger, RandomSel)
-with:
+drives any selection policy by name (explore-first Q-Learn / SARSA with the
+Eq. 11 reward, ExhaustiveSel with its LIB re-trigger, RandomSel, and the
+expert-seeded Hybrid) through ``SelectionService.instance`` with:
 
     LT  reward = measured wall-clock step time
     LIB reward = percent load imbalance over per-expert token loads (MoE) or
@@ -60,15 +60,16 @@ class StepAutoTuner:
 
     def __init__(self, plans: List[ExecutionPlan], build_fn,
                  method: str = "ExhaustiveSel", reward: str = "LT",
-                 seed: int = 0, region: str = "train_step"):
+                 seed: int = 0, region: str = "train_step",
+                 store_dir: Optional[str] = None):
         self.plans = list(plans)
         self.build_fn = build_fn
         self.region = region
-        self.service = SelectionService(method, reward_type=reward,
-                                        seed=seed,
-                                        n_actions=len(self.plans)) \
-            if method.lower() in ("qlearn", "sarsa") else \
-            SelectionService(method, seed=seed, n_actions=len(self.plans))
+        # any make_policy name works (incl. "Hybrid"); with store_dir the
+        # learned plan table warm-starts across runs (paper §5)
+        self.service = SelectionService(method, reward=reward, seed=seed,
+                                        n_actions=len(self.plans),
+                                        store_dir=store_dir)
         self._compiled: Dict[int, Callable] = {}
         self.compile_times: Dict[int, float] = {}
         self.history: List[Tuple[str, float, float]] = []
@@ -83,14 +84,15 @@ class StepAutoTuner:
     def step(self, *args):
         """Run one training step with the currently-selected plan.
         Returns (outputs, plan_name, step_time)."""
-        idx = self.service.begin(self.region)
-        fn = self._get(idx)
-        t0 = time.perf_counter()
-        out = fn(*args)
-        out = jax.block_until_ready(out)
-        dt = time.perf_counter() - t0
-        lib = self._lib_signal(out)
-        self.service.end(self.region, idx, dt, lib)
+        with self.service.instance(self.region) as inst:
+            idx = inst.action
+            fn = self._get(idx)
+            t0 = time.perf_counter()
+            out = fn(*args)
+            out = jax.block_until_ready(out)
+            dt = time.perf_counter() - t0
+            lib = self._lib_signal(out)
+            inst.report(loop_time=dt, lib=lib)
         self.history.append((self.plans[idx].name, dt, lib))
         return out, self.plans[idx].name, dt
 
@@ -109,7 +111,12 @@ class StepAutoTuner:
 
     @property
     def selected_plan(self) -> str:
-        return self.plans[self.service.begin(self.region)].name
+        """Peek at the plan the policy would pick now (no feedback owed)."""
+        return self.plans[self.service.policy(self.region).decide().action].name
+
+    def save(self) -> List[str]:
+        """Persist the learned plan table for warm starts (needs store_dir)."""
+        return self.service.save()
 
 
 def make_plan_builder(cfg: ModelConfig, opt_cfg: AdamWConfig,

@@ -9,6 +9,7 @@ Structure of the adaptation (DESIGN.md §2):
     loop instance         -> one dispatch wave over the pending queue
     LIB (Eq. 8)           -> imbalance of replica busy-times per wave
     selection methods     -> RandomSel/ExhaustiveSel/ExpertSel/QLearn/SARSA
+                             /Hybrid (expert-seeded RL), via SelectionService
 
 ``DispatchSimulator`` runs waves through the DES engine (replica service
 time = token-count cost model measured from a real decode step or supplied
@@ -68,9 +69,9 @@ class DispatchSimulator:
         self.cost = cost_model or ReplicaCostModel()
         kw = dict(selector_kw or {})
         kw.setdefault("seed", seed)
-        if selector.lower() in ("qlearn", "sarsa"):
-            kw.setdefault("reward_type", reward)
-        self.service = SelectionService(selector, **kw)
+        # any make_policy name works here, incl. "Hybrid"; the reward may be
+        # a serving-centric registry entry ("p95", "throughput", "LT+LIB")
+        self.service = SelectionService(selector, reward=reward, **kw)
         self.stats: List[WaveStats] = []
         self._replica_free = np.zeros(n_replicas)
 
@@ -78,37 +79,47 @@ class DispatchSimulator:
                  ) -> WaveStats:
         """One loop instance: dispatch all pending requests with the selected
         scheduling algorithm; replicas self-assign request-chunks."""
-        alg_idx = self.service.begin("dispatch")
-        tokens = np.array([r.prompt_len + r.gen_len for r in requests])
-        N = len(tokens)
-        alg = make_algorithm(alg_idx)
-        alg.reset(N, self.R, self.chunk_param)
+        inst = self.service.instance("dispatch")
+        with inst:
+            d = inst.decision.with_instance_defaults(self.chunk_param)
+            alg_idx = d.action
+            chunk_param = d.chunk_param
+            tokens = np.array([r.prompt_len + r.gen_len for r in requests])
+            N = len(tokens)
+            alg = make_algorithm(alg_idx)
+            alg.reset(N, self.R, chunk_param)
 
-        free = self._replica_free - self._replica_free.min()
-        cursor = 0
-        chunks = 0
-        if alg_idx == 0 and self.chunk_param <= 0:
-            bounds = np.linspace(0, N, self.R + 1).round().astype(int)
-            for r in range(self.R):
-                if bounds[r + 1] > bounds[r]:
-                    free[r] += self.cost.cost(tokens[bounds[r]:bounds[r + 1]])
-            chunks = self.R
-        else:
-            while alg.remaining > 0:
-                r = int(np.argmin(free))
-                c = alg.next_chunk(r)
-                if c <= 0:
-                    break
-                batch = tokens[cursor:cursor + c]
-                cursor += c
-                dt = self.cost.cost(batch)
-                alg.report(r, c, dt, dt + self.h)
-                free[r] += self.h + dt
-                chunks += 1
+            free = self._replica_free - self._replica_free.min()
+            cursor = 0
+            chunks = 0
+            if alg_idx == 0 and chunk_param <= 0:
+                bounds = np.linspace(0, N, self.R + 1).round().astype(int)
+                for r in range(self.R):
+                    if bounds[r + 1] > bounds[r]:
+                        free[r] += self.cost.cost(
+                            tokens[bounds[r]:bounds[r + 1]])
+                chunks = self.R
+            else:
+                while alg.remaining > 0:
+                    r = int(np.argmin(free))
+                    c = alg.next_chunk(r)
+                    if c <= 0:
+                        break
+                    batch = tokens[cursor:cursor + c]
+                    cursor += c
+                    dt = self.cost.cost(batch)
+                    alg.report(r, c, dt, dt + self.h)
+                    free[r] += self.h + dt
+                    chunks += 1
 
-        makespan = float(free.max())
-        lib = percent_load_imbalance(free)
-        self.service.end("dispatch", alg_idx, makespan, lib)
+            makespan = float(free.max())
+            lib = percent_load_imbalance(free)
+            # full structured observation: the policy's reward function can
+            # draw on tail latency / throughput, not just (LT, LIB)
+            inst.report(loop_time=makespan, lib=lib,
+                        throughput=N / max(makespan, 1e-12),
+                        tail_latency=float(np.percentile(free, 95)),
+                        pe_times=free.tolist())
         self._replica_free = free
         st = WaveStats(wave=wave_id, algorithm=alg_idx, n_requests=N,
                        makespan=makespan, lib=lib, chunks=chunks)

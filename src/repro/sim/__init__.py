@@ -6,7 +6,7 @@ from .engine import InstanceResult, run_instance
 from .campaign import (CampaignResult, FixedRun, PortfolioSweep, SelectorRun,
                        run_campaign_cell, run_fixed, run_selector,
                        sweep_portfolio, chunk_param_for, CHUNK_MODES,
-                       SELECTOR_GRID)
+                       SELECTOR_GRID, EXTENDED_SELECTOR_GRID)
 
 __all__ = [
     "SYSTEMS", "SystemModel", "get_system", "APPLICATIONS", "Application",
@@ -14,4 +14,5 @@ __all__ = [
     "CampaignResult", "FixedRun", "PortfolioSweep", "SelectorRun",
     "run_campaign_cell", "run_fixed", "run_selector", "sweep_portfolio",
     "chunk_param_for", "CHUNK_MODES", "SELECTOR_GRID",
+    "EXTENDED_SELECTOR_GRID",
 ]

@@ -10,13 +10,20 @@ c.o.v. of Fig. 4, and the selection traces of Figs. 7-8.
 from __future__ import annotations
 
 import math
+import zlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+
+def _digest(label: str) -> int:
+    """Stable 16-bit label digest for rng seed tuples — ``hash()`` is salted
+    per process for strings, which made campaign noise irreproducible."""
+    return zlib.crc32(label.encode("utf-8")) & 0xFFFF
+
 from ..core import (ALGORITHM_NAMES, N_ALGORITHMS, SelectionService,
-                    coefficient_of_variation, exp_chunk, make_selector)
+                    coefficient_of_variation, exp_chunk)
 from .engine import run_instance
 from .systems import SYSTEMS, SystemModel, get_system
 from .workloads import APPLICATIONS, Application, get_application
@@ -63,8 +70,8 @@ def run_fixed(app: Application, system: SystemModel, alg: int,
             samples = []
             for r in range(reps):
                 rng = np.random.default_rng(
-                    (seed, hash(app.name) & 0xFFFF, system.P, alg,
-                     hash(chunk_mode) & 0xFFFF, t, r))
+                    (seed, _digest(app.name), system.P, alg,
+                     _digest(chunk_mode), t, r))
                 res = run_instance(profile, system, alg, cp, rng)
                 samples.append((res.loop_time, res.lib))
             lt = float(np.median([s[0] for s in samples]))
@@ -148,44 +155,40 @@ def run_selector(app_name: str, system_name: str, selector: str,
                  T: Optional[int] = None, seed: int = 0,
                  sweep: Optional[PortfolioSweep] = None) -> SelectorRun:
     """Execute one selection method over the full time-stepped application.
-    Every modified loop gets an independent selector via SelectionService
-    (LB4OMP loop ids).  ``sweep`` is required for selector='Oracle'."""
+
+    Every modified loop gets an independent policy via ``SelectionService``
+    (LB4OMP loop ids); ``selector`` is any ``make_policy`` name, including
+    "Hybrid" (expert-seeded RL) and "Oracle" (per-loop overrides carrying
+    the per-step best; ``sweep`` is required for it)."""
     app = get_application(app_name)
     system = get_system(system_name)
     T = T or app.T
 
-    kw: Dict = {"seed": seed}
-    if reward is not None:
-        kw["reward_type"] = reward
     if selector.lower() == "oracle":
         assert sweep is not None, "Oracle needs a portfolio sweep"
-        service = None
-        best_fns = {nm: sweep.oracle_best_fn(li)
-                    for li, nm in enumerate(app.loop_names)}
-        oracle_t = {nm: 0 for nm in app.loop_names}
+        service = SelectionService("Oracle", overrides={
+            nm: {"best_fn": sweep.oracle_best_fn(li)}
+            for li, nm in enumerate(app.loop_names)})
     else:
-        service = SelectionService(selector, **kw)
+        service = SelectionService(selector, reward=reward, seed=seed)
 
-    history: Dict[str, List[Tuple[int, float, float]]] = {
-        nm: [] for nm in app.loop_names}
-    rng = np.random.default_rng((seed, hash(app_name) & 0xFFFF, system.P,
-                                 hash(selector) & 0xFFFF,
-                                 hash(chunk_mode) & 0xFFFF))
+    rng = np.random.default_rng((seed, _digest(app_name), system.P,
+                                 _digest(selector), _digest(chunk_mode)))
     total = 0.0
     for t in range(T):
         for li, profile in enumerate(app.loops(t)):
             nm = app.loop_names[li]
-            cp = chunk_param_for(chunk_mode, profile.N, system.P)
-            if service is None:
-                a = best_fns[nm](oracle_t[nm])
-                oracle_t[nm] += 1
-            else:
-                a = service.begin(nm)
-            res = run_instance(profile, system, a, cp, rng)
-            if service is not None:
-                service.end(nm, a, res.loop_time, res.lib)
-            history[nm].append((a, res.loop_time, res.lib))
+            with service.instance(nm) as inst:
+                # a policy may steer the chunk parameter; the campaign's
+                # chunk mode fills the default
+                d = inst.decision.with_instance_defaults(
+                    chunk_param_for(chunk_mode, profile.N, system.P))
+                res = run_instance(profile, system, d.action, d.chunk_param,
+                                   rng)
+                inst.report(loop_time=res.loop_time, lib=res.lib)
             total += res.loop_time
+    # the service's per-region records ARE the selection traces
+    history = {nm: list(service.history(nm)) for nm in app.loop_names}
     return SelectorRun(selector=selector, chunk_mode=chunk_mode,
                        reward=reward, total=total, history=history)
 
@@ -198,6 +201,10 @@ SELECTOR_GRID: List[Tuple[str, Optional[str]]] = [
     ("RandomSel", None), ("ExhaustiveSel", None), ("ExpertSel", None),
     ("QLearn", "LT"), ("QLearn", "LIB"), ("SARSA", "LT"), ("SARSA", "LIB"),
 ]
+
+#: the paper grid plus the §6 expert-seeded RL combination
+EXTENDED_SELECTOR_GRID: List[Tuple[str, Optional[str]]] = \
+    SELECTOR_GRID + [("Hybrid", "LT"), ("Hybrid", "LT+LIB")]
 
 
 @dataclass

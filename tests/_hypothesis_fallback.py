@@ -1,0 +1,59 @@
+"""Deterministic stand-in for the tiny slice of hypothesis the suite uses.
+
+``hypothesis`` is an optional dev extra (``pip install -e .[dev]``).  When
+it is absent, property tests degrade to an exhaustive sweep over a small
+deterministic grid drawn from each strategy's bounds — weaker than random
+property testing, but the invariants still get exercised and the tier-1
+suite stays runnable on a bare ``numpy + jax`` image.
+
+Usage in a test module:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+"""
+
+from __future__ import annotations
+
+import itertools
+
+
+class _Strategy:
+    def __init__(self, values):
+        self.values = list(values)
+
+
+class _St:
+    @staticmethod
+    def integers(lo, hi):
+        mid = (lo + hi) // 2
+        return _Strategy(sorted({lo, min(lo + 1, hi), mid,
+                                 max(hi - 1, lo), hi}))
+
+    @staticmethod
+    def sampled_from(seq):
+        return _Strategy(seq)
+
+    @staticmethod
+    def booleans():
+        return _Strategy([False, True])
+
+
+st = _St()
+
+
+def given(**params):
+    def deco(fn):
+        def run():
+            keys = list(params)
+            for combo in itertools.product(*(params[k].values for k in keys)):
+                fn(**dict(zip(keys, combo)))
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        return run
+    return deco
+
+
+def settings(**kw):
+    return lambda fn: fn

@@ -3,7 +3,11 @@ the expert-based selectors."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra not installed: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (ALGORITHM_NAMES, N_ALGORITHMS, ExhaustiveSel,
                         QLearnAgent, RandomSel, RewardTracker, SarsaAgent,

@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra not installed
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import ALGORITHM_NAMES, alg_index, exp_chunk
 from repro.sim import (get_application, get_system, run_instance,
