@@ -1,0 +1,110 @@
+"""Backend shoot-out: full portfolio sweep, Python event loop vs batched
+vmapped JAX engine, per app-system pair.
+
+Measures wall-clock for ``sweep_portfolio`` (12 algorithms x 2 chunk modes
+x reps x T time-steps), checks that both backends elect the same Oracle,
+and records everything to ``results/bench_backends.json`` (the BENCH
+record the acceptance gate reads: speedup >= 5x on at least one pair).
+
+``--smoke`` is the CI drift gate: tiny T on both backends through
+``bench_cov`` plus an Oracle-agreement assertion — fails fast when the
+engines diverge.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results")
+
+PAIRS = (("mandelbrot", "broadwell"), ("stream", "cascadelake"),
+         ("sphynx", "epyc"), ("tc", "epyc"))
+
+
+def run(T: int = 16, reps: int = 3, pairs=PAIRS) -> dict:
+    from repro.sim import sweep_portfolio
+
+    out = {}
+    for app, sysname in pairs:
+        t0 = time.perf_counter()
+        sp = sweep_portfolio(app, sysname, T=T, reps=reps, backend="python")
+        t_py = time.perf_counter() - t0
+
+        # first JAX call pays jit compilation; steady-state is what a
+        # campaign of many cells sees, so warm up then measure
+        sweep_portfolio(app, sysname, T=T, reps=reps, backend="jax")
+        t0 = time.perf_counter()
+        sj = sweep_portfolio(app, sysname, T=T, reps=reps, backend="jax")
+        t_jax = time.perf_counter() - t0
+
+        agree = float((sp.oracle_argmin() == sj.oracle_argmin()).mean())
+        oracle_rel = float(abs(sp.oracle_total() - sj.oracle_total())
+                           / sp.oracle_total())
+        out[f"{app}/{sysname}"] = {
+            "T": T, "reps": reps,
+            "python_s": round(t_py, 4),
+            "jax_warm_s": round(t_jax, 4),
+            "speedup": round(t_py / max(t_jax, 1e-9), 2),
+            "oracle_argmin_agreement": agree,
+            "oracle_total_rel_diff": oracle_rel,
+        }
+    return out
+
+
+def smoke() -> None:
+    """CI gate: tiny-T cov on both backends + Oracle agreement on the
+    well-separated TC/EPYC cell (40 % winner margin)."""
+    from benchmarks.bench_cov import run as cov_run
+    from repro.sim import sweep_portfolio
+
+    rows_py = cov_run(T=2, reps=1, backend="python")
+    rows_jax = cov_run(T=2, reps=1, backend="jax")
+    for (a, s, cp), (_, _, cj) in zip(rows_py, rows_jax):
+        assert np.isfinite(cp) and np.isfinite(cj), (a, s)
+        # c.o.v. spans orders of magnitude across cells; backends must
+        # land in the same regime
+        assert abs(np.log10(max(cj, 1e-9) / max(cp, 1e-9))) < 0.35, \
+            (a, s, cp, cj)
+        print(f"smoke cov {a}/{s}: python={cp:.3f} jax={cj:.3f}")
+    sp = sweep_portfolio("tc", "epyc", T=4, reps=1, backend="python")
+    sj = sweep_portfolio("tc", "epyc", T=4, reps=1, backend="jax")
+    assert (sp.oracle_argmin() == sj.oracle_argmin()).all(), \
+        "backends disagree on the TC/EPYC Oracle"
+    print("smoke: backends agree on the TC/EPYC T=4 Oracle")
+
+
+def main() -> list:
+    os.makedirs(OUT, exist_ok=True)
+    res = run()
+    with open(os.path.join(OUT, "bench_backends.json"), "w") as f:
+        json.dump(res, f, indent=2)
+    rows = []
+    for pair, r in res.items():
+        rows.append((f"backends_{pair.replace('/', '_')}",
+                     r["jax_warm_s"] * 1e6,
+                     f"speedup={r['speedup']}x,"
+                     f"agree={r['oracle_argmin_agreement']:.2f}"))
+    best = max(r["speedup"] for r in res.values())
+    rows.append(("backends_best_speedup", 0.0, f"{best}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    # allow `python benchmarks/bench_backends.py` from the repo root
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for row in main():
+            print(f"{row[0]},{row[1]:.3f},{row[2]}")

@@ -11,11 +11,12 @@ from repro.sim import APPLICATIONS, SYSTEMS, sweep_portfolio
 OUT = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
-def run(T: int = 24, reps: int = 2):
+def run(T: int = 24, reps: int = 2, backend=None):
     rows = []
     for app in APPLICATIONS:
         for system in SYSTEMS:
-            sweep = sweep_portfolio(app, system, T=T, reps=reps)
+            sweep = sweep_portfolio(app, system, T=T, reps=reps,
+                                    backend=backend)
             rows.append((app, system, sweep.cov()))
     return rows
 

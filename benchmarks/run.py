@@ -11,6 +11,7 @@ Benches:
     serving      L3          chunk-scheduled dispatch vs selectors
     autotune     L2          step-plan selection on a real model
     roofline     §Roofline   three-term roofline per dry-run cell
+    backends     §Backends   portfolio sweep: python vs batched JAX engine
 """
 
 from __future__ import annotations
@@ -27,9 +28,9 @@ def main() -> None:
                     help="full-fidelity Fig. 5 campaign (hours)")
     args = ap.parse_args()
 
-    from . import (bench_anova, bench_autotune, bench_chunks, bench_cov,
-                   bench_degradation, bench_roofline, bench_serving,
-                   bench_traces)
+    from . import (bench_anova, bench_autotune, bench_backends, bench_chunks,
+                   bench_cov, bench_degradation, bench_roofline,
+                   bench_serving, bench_traces)
     benches = {
         "chunks": bench_chunks.main,
         "cov": bench_cov.main,
@@ -39,6 +40,7 @@ def main() -> None:
         "serving": bench_serving.main,
         "autotune": bench_autotune.main,
         "roofline": bench_roofline.main,
+        "backends": bench_backends.main,
     }
     if args.only:
         benches = {args.only: benches[args.only]}

@@ -16,6 +16,9 @@ def main():
     ap.add_argument("--systems", default="cascadelake")
     ap.add_argument("--T", type=int, default=300)
     ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--backend", default=None,
+                    help="simulation backend for the portfolio sweeps "
+                         "(python | jax; default REPRO_SIM_BACKEND)")
     args = ap.parse_args()
 
     apps = (list(APPLICATIONS) if args.apps == "all"
@@ -25,7 +28,8 @@ def main():
 
     for app in apps:
         for system in systems:
-            cell = run_campaign_cell(app, system, T=args.T, reps=args.reps)
+            cell = run_campaign_cell(app, system, T=args.T, reps=args.reps,
+                                     backend=args.backend)
             print(f"\n=== {app} on {system} ===   "
                   f"Oracle={cell.oracle_total:.2f}s  "
                   f"c.o.v.={cell.sweep.cov():.3f}")

@@ -1,8 +1,13 @@
 #!/usr/bin/env python
 """Drive the full dry-run sweep: one subprocess per (arch x shape x mesh)
 cell (isolation against OOM / crash; resumable).  Appends JSON lines to
-results/dryrun_all.jsonl and skips cells already present."""
+results/dryrun_all.jsonl and skips cells already present.
 
+``--backend`` exports ``REPRO_SIM_BACKEND`` to every subprocess, so any
+simulation the cells consult (autotune what-ifs, dispatch planning) runs on
+the chosen engine without threading a flag through each layer."""
+
+import argparse
 import json
 import os
 import subprocess
@@ -10,12 +15,17 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.configs import ARCH_NAMES, SHAPES  # noqa: E402
+from repro.sim.backends import BACKEND_ENV, backend_names  # noqa: E402
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "results",
                    os.environ.get("DRYRUN_OUT", "dryrun_all.jsonl"))
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default=None, choices=backend_names(),
+                    help="simulation backend for the spawned cells")
+    args = ap.parse_args()
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     done = set()
     if os.path.exists(OUT):
@@ -27,6 +37,8 @@ def main():
                 except Exception:
                     pass
     env = dict(os.environ, PYTHONPATH="src")
+    if args.backend:
+        env[BACKEND_ENV] = args.backend
     cells = [(a, s, m) for a in ARCH_NAMES for s in SHAPES
              for m in ("single", "multi")]
     for arch, shape, mesh in cells:

@@ -1,15 +1,35 @@
-"""Pure-JAX chunk-size schedules for the non-adaptive portfolio algorithms.
+"""Pure-JAX chunk-size schedules for the scheduling portfolio.
 
 ``chunk_schedule(alg, N, P, chunk_param, max_chunks)`` returns the sequence of
 chunk sizes a central work queue would deliver, computed entirely with
 ``jax.lax`` control flow so it can run under ``jit`` (e.g. inside the serving
-dispatcher or on-device microbatch planners).  Adaptive algorithms (AWF-*,
-mAF) depend on runtime telemetry and live in the stateful host classes
-(`repro.core.portfolio`); this module covers:
+dispatcher, the batched simulation backend, or on-device microbatch
+planners).  Covered directly:
 
     STATIC(0)  SS(1)  GSS(2)  AutoLLVM(3)  TSS(4)  mFAC2(6)
 
-Property tests assert exact agreement with the host classes.
+The *adaptive* algorithms (AWF-B/C/D/E, mAF) depend on runtime telemetry and
+live in the stateful host classes (``repro.core.portfolio``).  For them this
+module provides **telemetry-free surrogate recurrences** — the exact chunk
+sequence the host classes emit under constant per-iteration cost (weights
+pinned at 1, variance 0):
+
+    AWF-B/D(7,9)  batches of P chunks, each batch Cs = ceil(R/2P)
+    AWF-C/E(8,10) Cs = ceil(R/2P) recomputed per request
+    mAF(11)       first chunk min(100, N//P), then Cs = R//P
+
+Property tests assert exact agreement with the host classes (constant
+telemetry for the adaptive family).  ``staticsteal_schedule`` replays
+StaticSteal's quantum serving + half-stealing event loop (noise-free,
+uniform cost) and yields explicit (start, size, pe) triples, since stolen
+chunks are not contiguous in iteration space.
+
+Integer safety: with x64 disabled everything runs in int32.  All recurrences
+are written to stay within int32 for any N <= 2**31 - 1 (STREAM's N = 2e9
+included — the old TSS fixed-point state ``f0 * 1024`` silently wrapped
+there).  Larger N requires ``jax_enable_x64``; ``chunk_schedule`` raises a
+clear error instead of wrapping whenever N is concrete (a traced N inside
+an enclosing jit cannot be validated — keep such callers within int32).
 """
 
 from __future__ import annotations
@@ -18,17 +38,24 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .portfolio import DIRECT_CHUNK_SET
 
-# static upper bound on schedule length for lax.while_loop buffers
+INT32_MAX = 2**31 - 1
+
+#: algorithms chunk_schedule can emit (5 = StaticSteal has its own function)
+SCHEDULABLE = frozenset({0, 1, 2, 3, 4, 6, 7, 8, 9, 10, 11})
 
 
 def _ceil_div(a, b):
     return -(-a // b)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 4))
+def _x64_enabled() -> bool:
+    return bool(jax.config.read("jax_enable_x64"))
+
+
 def chunk_schedule(alg: int, N, P, chunk_param, max_chunks: int = 4096):
     """Returns (sizes[max_chunks] int32, count int32).
 
@@ -37,75 +64,195 @@ def chunk_schedule(alg: int, N, P, chunk_param, max_chunks: int = 4096):
     the size directly; otherwise ``max(algorithm, max(1, chunk_param))``;
     always clipped by the remaining iterations.
     """
-    N = jnp.asarray(N, jnp.int64) if jax.config.read("jax_enable_x64") else jnp.asarray(N, jnp.int32)
-    P = jnp.asarray(P, jnp.int32)
+    if alg not in SCHEDULABLE:
+        raise ValueError(
+            f"chunk_schedule: unsupported algorithm {alg} "
+            "(StaticSteal needs staticsteal_schedule)")
+    if not _x64_enabled():
+        try:
+            n_val = int(N)          # ints, np scalars, concrete jnp arrays
+        except Exception:           # traced inside jit: cannot validate
+            n_val = None
+        if n_val is not None and n_val > INT32_MAX:
+            raise ValueError(
+                f"chunk_schedule: N={N} exceeds int32; enable "
+                "jax_enable_x64")
+    return _chunk_schedule(alg, N, P, chunk_param, max_chunks)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def _chunk_schedule(alg: int, N, P, chunk_param, max_chunks: int):
+    dtype = jnp.int64 if _x64_enabled() else jnp.int32
+    N = jnp.asarray(N, dtype)
+    P32 = jnp.asarray(P, jnp.int32)
+    P = P32.astype(dtype)
     chunk_param = jnp.asarray(chunk_param, jnp.int32)
+    one = jnp.asarray(1, dtype)
+    zero = jnp.asarray(0, dtype)
 
-    def compute(alg, state, remaining, i):
-        """Raw (pre-floor) chunk for the i-th request; `state` carries the
-        algorithm-specific recurrence (TSS next size ×1024, mFAC2 counter)."""
-        if alg == 0:      # STATIC: ceil(N/P) (chunk_param handled by floor)
-            raw = _ceil_div(N, P)
-        elif alg == 1:    # SS
-            raw = jnp.asarray(1, remaining.dtype)
-        elif alg == 2:    # GSS: ceil(R/P)
-            raw = _ceil_div(remaining, P)
-        elif alg == 3:    # AutoLLVM: guided/2P with quantum
-            quantum = jnp.maximum(1, N // (P * P * 4))
-            raw = jnp.maximum(quantum, _ceil_div(remaining, 2 * P))
-        elif alg == 4:    # TSS: linear decrement, fixed-point state
-            raw = jnp.maximum(1, state // 1024)
-        elif alg == 6:    # mFAC2: batch counter in state
-            j = state // P
-
-            def batch_cs(j):
-                def body(_, carry):
-                    R, cs = carry
-                    cs = _ceil_div(R, 2 * P)
-                    return R - P * cs, cs
-                _, cs = jax.lax.fori_loop(0, j + 1, body, (N, jnp.asarray(0, N.dtype)))
-                return cs
-            raw = jnp.maximum(1, batch_cs(j))
-        else:
-            raise ValueError(f"chunk_schedule: unsupported algorithm {alg}")
-        return raw
-
-    def next_state(alg, state):
-        if alg == 4:
-            f = jnp.maximum(1.0, N.astype(jnp.float32) / (2.0 * P))
-            l = 1.0
-            A = jnp.ceil(2.0 * N.astype(jnp.float32) / (f + l))
-            delta = jnp.where(A > 1, (f - l) / (A - 1), 0.0)
-            dec = jnp.asarray(delta * 1024, state.dtype)
-            return jnp.maximum(jnp.asarray(1024, state.dtype), state - dec)
-        if alg == 6:
-            return state + 1
-        return state
-
+    # --- per-algorithm precomputed constants (overflow-safe int arithmetic)
+    if alg == 3:
+        quantum = jnp.maximum(one, N // (P * P * 4))
     if alg == 4:
-        f0 = jnp.maximum(1, _ceil_div(N, 2 * P))
-        init_state = (f0 * 1024).astype(N.dtype)
+        # TSS (Eq. 4, f = N/(2P), l = 1): chunk_k = ceil(f - k*delta) with
+        # delta = (f-1)/(A-1), i.e. ceil((N*Am1 - k*(N-2P)) / (2P*Am1)).
+        # Exact rational form via split multiplies — no intermediate ever
+        # leaves int32 for N <= 2**31-1 (the old ``f0 * 1024`` fixed point
+        # wrapped on STREAM-scale loops).
+        twoP = 2 * P
+        tss_small = N < twoP               # f clamps to 1 -> unit chunks
+        # A = ceil(2N/(f+1)) = 4P - floor(8P^2 / (N+2P))
+        A = 4 * P - (8 * P * P) // (N + twoP)
+        Am1 = jnp.maximum(one, A - 1)
+        tss_D = twoP * Am1
+        tss_a1, tss_b1 = N // tss_D, N % tss_D
+        n2 = jnp.maximum(zero, N - twoP)
+        tss_a2, tss_b2 = n2 // tss_D, n2 % tss_D
+    if alg == 11:
+        first_maf = jnp.minimum(jnp.asarray(100, dtype),
+                                jnp.maximum(one, N // P))
+
+    # --- initial recurrence state (s0, s1, s2); meaning depends on alg
+    if alg == 6:
+        # mFAC2: s0 = chunks left in batch, s1 = batch Cs, s2 = batch R
+        init_state = (P, _ceil_div(N, 2 * P), N)
     else:
-        init_state = jnp.asarray(0, N.dtype)
+        # AWF-B/D start with s0 = 0 so their first request opens a batch
+        init_state = (zero, zero, zero)
 
     direct = alg in DIRECT_CHUNK_SET
 
     def body(carry):
-        sizes, count, remaining, state = carry
-        raw = compute(alg, state, remaining, count)
+        sizes, count, remaining, s0, s1, s2 = carry
+        if alg == 0:      # STATIC: ceil(N/P) (chunk_param handled by floor)
+            raw = _ceil_div(N, P)
+        elif alg == 1:    # SS
+            raw = one
+        elif alg == 2:    # GSS: ceil(R/P)
+            raw = _ceil_div(remaining, P)
+        elif alg == 3:    # AutoLLVM: guided/2P with quantum
+            raw = jnp.maximum(quantum, _ceil_div(remaining, 2 * P))
+        elif alg == 4:    # TSS: linear decrement, exact rational arithmetic
+            k = jnp.minimum(count.astype(dtype), Am1)
+            hi_part = tss_a1 * Am1 - k * tss_a2
+            lo_part = tss_b1 * Am1 - k * tss_b2
+            raw = hi_part + _ceil_div(lo_part, tss_D)
+            raw = jnp.where(tss_small, one, jnp.maximum(one, raw))
+        elif alg == 6:    # mFAC2: batches of P chunks, R_{j+1} = R_j - P*Cs_j
+            new_batch = s0 <= 0
+            s2 = jnp.where(new_batch, s2 - P * s1, s2)
+            s1 = jnp.where(new_batch,
+                           jnp.maximum(zero, _ceil_div(s2, 2 * P)), s1)
+            s0 = jnp.where(new_batch, P - 1, s0 - 1)
+            raw = jnp.maximum(one, s1)
+        elif alg in (7, 9):   # AWF-B/D surrogate: batched factoring, w = 1
+            new_batch = s0 <= 0
+            s1 = jnp.where(new_batch, _ceil_div(remaining, 2 * P), s1)
+            s0 = jnp.where(new_batch, P - 1, s0 - 1)
+            raw = jnp.maximum(one, s1)
+        elif alg in (8, 10):  # AWF-C/E surrogate: chunked factoring, w = 1
+            raw = jnp.maximum(one, _ceil_div(remaining, 2 * P))
+        elif alg == 11:   # mAF surrogate: mu constant, sigma 0 -> Cs = R/P
+            raw = jnp.where(count == 0, first_maf,
+                            jnp.maximum(one, remaining // P))
         if direct:
-            c = jnp.where(chunk_param > 0, chunk_param.astype(raw.dtype), raw)
+            c = jnp.where(chunk_param > 0, chunk_param.astype(dtype), raw)
         else:
-            c = jnp.maximum(raw, jnp.maximum(1, chunk_param).astype(raw.dtype))
+            c = jnp.maximum(raw, jnp.maximum(1, chunk_param).astype(dtype))
         c = jnp.clip(c, 1, remaining)
         sizes = sizes.at[count].set(c.astype(jnp.int32))
-        return sizes, count + 1, remaining - c, next_state(alg, state)
+        return sizes, count + 1, remaining - c, s0, s1, s2
 
     def cond(carry):
-        _, count, remaining, _ = carry
+        _, count, remaining = carry[0], carry[1], carry[2]
         return (remaining > 0) & (count < max_chunks)
 
     sizes0 = jnp.zeros((max_chunks,), jnp.int32)
-    sizes, count, remaining, _ = jax.lax.while_loop(
-        cond, body, (sizes0, jnp.asarray(0, jnp.int32), N, init_state))
-    return sizes, count
+    out = jax.lax.while_loop(
+        cond, body,
+        (sizes0, jnp.asarray(0, jnp.int32), N) + init_state)
+    return out[0], out[1]
+
+
+# ---------------------------------------------------------------------------
+# StaticSteal: quantum serving + half-stealing, explicit (start, size, pe)
+# ---------------------------------------------------------------------------
+
+def staticsteal_schedule(N: int, P: int, chunk_param: int,
+                         max_chunks: int = 4096, unit: float = 1.0,
+                         h: float = 0.0, bcost: float = 0.0,
+                         base_infl: float = 1.0, amp: float = 0.0,
+                         c_loc: float = 64.0):
+    """Replay StaticSteal's event loop (noise-free, per-iteration cost
+    ``unit``) and return the delivered schedule.
+
+    Returns ``(starts, sizes, pes, own, count)`` — all ``(max_chunks,)``
+    buffers plus the live count.  ``own[i]`` marks chunks served from the
+    PE's original range (no locality penalty).  Serve order replays the
+    reference engine's argmin-over-available-times policy, so for uniform
+    noise-free loops the sequence is *exactly* the Python engine's; for
+    non-uniform or noisy loops it is the documented surrogate.
+
+    Host-side wrapper: the P+1 range bounds are computed in float64 numpy
+    (bit-identical to the engine) and passed into the jitted replay.
+    """
+    bounds = np.linspace(0, N, P + 1).round().astype(np.int64)
+    if not _x64_enabled():
+        if N > INT32_MAX:
+            raise ValueError(
+                f"staticsteal_schedule: N={N} exceeds int32; enable x64")
+        bounds = bounds.astype(np.int32)
+    return _staticsteal_replay(jnp.asarray(bounds), int(P), int(max_chunks),
+                               max(1, int(chunk_param)), float(unit),
+                               float(h), float(bcost), float(base_infl),
+                               float(amp), float(c_loc))
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _staticsteal_replay(bounds, P: int, max_chunks: int, quantum,
+                        unit, h, bcost, base_infl, amp, c_loc):
+    dtype = bounds.dtype
+    q = jnp.asarray(quantum, dtype)
+    lo0 = bounds[:-1]
+    hi0 = bounds[1:]
+    N = bounds[-1]
+
+    def body(carry):
+        starts, sizes, pes, own, i, lo, hi, avail, remaining = carry
+        pe = jnp.argmin(avail)
+        need = lo[pe] >= hi[pe]
+        # steal the back half of the richest victim (argmax = first richest,
+        # matching the engine's max(); victim != pe whenever remaining > 0)
+        victim = jnp.argmax(hi - lo)
+        vh = hi[victim]
+        half = (vh - lo[victim] + 1) // 2
+        hi = hi.at[victim].set(jnp.where(need, vh - half, hi[victim]))
+        lo_pe = jnp.where(need, vh - half, lo[pe])
+        hi_pe = jnp.where(need, vh, hi[pe])
+        lo = lo.at[pe].set(lo_pe)
+        hi = hi.at[pe].set(hi_pe)
+        c = jnp.minimum(q, hi_pe - lo_pe)
+        is_own = (bounds[pe] <= lo_pe) & (lo_pe < bounds[pe + 1])
+        locf = jnp.where(is_own, 1.0,
+                         base_infl + amp * c_loc / (c.astype(jnp.float32)
+                                                    + c_loc))
+        dt = h + c.astype(jnp.float32) * unit * locf + bcost
+        avail = avail.at[pe].add(dt)
+        lo = lo.at[pe].add(c)
+        starts = starts.at[i].set(lo_pe.astype(jnp.int32))
+        sizes = sizes.at[i].set(c.astype(jnp.int32))
+        pes = pes.at[i].set(pe.astype(jnp.int32))
+        own = own.at[i].set(is_own)
+        return starts, sizes, pes, own, i + 1, lo, hi, avail, remaining - c
+
+    def cond(carry):
+        i, remaining = carry[4], carry[8]
+        return (remaining > 0) & (i < max_chunks)
+
+    z = jnp.zeros((max_chunks,), jnp.int32)
+    out = jax.lax.while_loop(
+        cond, body,
+        (z, z, z, jnp.zeros((max_chunks,), bool),
+         jnp.asarray(0, jnp.int32), lo0, hi0,
+         jnp.zeros((P,), jnp.float32), N))
+    return out[0], out[1], out[2], out[3], out[4]

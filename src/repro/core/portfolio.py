@@ -201,22 +201,36 @@ class AutoLLVM(ChunkAlgorithm):
 
 
 class Trapezoid(ChunkAlgorithm):
-    """TSS, Eq. 4 with the recommended f = N/(2P), l = 1."""
+    """TSS, Eq. 4 with the recommended f = N/(2P), l = 1.
+
+    Chunk k is ceil(f - k*delta) with delta = (f-1)/(A-1), evaluated in
+    exact integer arithmetic (chunk_k = ceil((N*(A-1) - k*(N-2P)) /
+    (2P*(A-1)))) so the sequence is bit-identical to the pure-JAX
+    ``chunk_schedule`` — float64 running subtraction drifts past exact
+    integer crossings and used to produce platform-hostage +-1 chunks.
+    """
 
     def __init__(self) -> None:
         self.name, self.index = "TSS", 4
 
     def _reset_impl(self) -> None:
-        f = max(1.0, self.N / (2.0 * self.P))
-        l = 1.0
-        A = math.ceil(2.0 * self.N / (f + l))
-        self._delta = (f - l) / (A - 1) if A > 1 else 0.0
-        self._next = f
+        self._k = 0
+        twoP = 2 * self.P
+        if self.N < twoP:          # f clamps to 1 -> delta 0 -> unit chunks
+            self._Am1 = 0
+            return
+        # A = ceil(2N/(f+1)) = ceil(4PN/(N+2P)) = 4P - floor(8P^2/(N+2P))
+        A = 4 * self.P - (8 * self.P * self.P) // (self.N + twoP)
+        self._Am1 = max(1, A - 1)
+        self._D = twoP * self._Am1
 
     def _compute(self, pe: int) -> int:
-        c = max(1, int(math.ceil(self._next)))
-        self._next = max(1.0, self._next - self._delta)
-        return c
+        if self._Am1 == 0:
+            return 1
+        k = min(self._k, self._Am1)
+        self._k += 1
+        num = self.N * self._Am1 - k * (self.N - 2 * self.P)
+        return max(1, -(-num // self._D))
 
 
 class StaticSteal(ChunkAlgorithm):

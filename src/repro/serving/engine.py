@@ -20,14 +20,17 @@ on slots, used by examples/serve driver.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core import SelectionService, make_portfolio, percent_load_imbalance
+from ..core import (N_ALGORITHMS, SelectionService, make_portfolio,
+                    percent_load_imbalance)
 from ..core.portfolio import make_algorithm
 from ..data.pipeline import Request
+from ..sim.backends import get_backend
 
 
 @dataclass
@@ -62,11 +65,15 @@ class DispatchSimulator:
                  reward: str = "LT", chunk_param: int = 0, seed: int = 0,
                  cost_model: Optional[ReplicaCostModel] = None,
                  dispatch_overhead: float = 0.2e-3,
-                 selector_kw: Optional[dict] = None):
+                 selector_kw: Optional[dict] = None,
+                 backend: Optional[str] = None):
         self.R = n_replicas
         self.chunk_param = chunk_param
         self.h = dispatch_overhead
         self.cost = cost_model or ReplicaCostModel()
+        #: simulation backend for ``what_if`` queries ("jax" evaluates the
+        #: whole candidate set in one batched call)
+        self.backend = backend
         kw = dict(selector_kw or {})
         kw.setdefault("seed", seed)
         # any make_policy name works here, incl. "Hybrid"; the reward may be
@@ -74,6 +81,28 @@ class DispatchSimulator:
         self.service = SelectionService(selector, reward=reward, **kw)
         self.stats: List[WaveStats] = []
         self._replica_free = np.zeros(n_replicas)
+
+    def _wave_prefix(self, requests: List[Request]) -> np.ndarray:
+        """(N+1,) cumulative batch-cost model over the request sequence:
+        cost of chunk [a, b) = prefix[b] - prefix[a] (+ the fixed term per
+        dispatch, folded into the per-chunk overhead)."""
+        tokens = np.array([r.prompt_len + r.gen_len for r in requests],
+                          dtype=np.float64)
+        return (self.cost.per_token * np.concatenate([[0.0],
+                                                      np.cumsum(tokens)])
+                + self.cost.per_request * np.arange(len(tokens) + 1))
+
+    def what_if(self, requests: List[Request],
+                algs: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Batched what-if: predicted wave makespan for each candidate
+        scheduling algorithm over the *current* replica busy-state, without
+        dispatching anything (the SimAS-style consultation a policy can use
+        to rank its candidate set before committing)."""
+        algs = list(algs) if algs is not None else list(range(N_ALGORITHMS))
+        free = self._replica_free - self._replica_free.min()
+        return get_backend(self.backend).what_if_wave(
+            self._wave_prefix(requests), self.R, free, self.h,
+            self.cost.fixed, algs, chunk_param=self.chunk_param)
 
     def run_wave(self, requests: List[Request], wave_id: int = 0
                  ) -> WaveStats:
@@ -152,7 +181,9 @@ class ContinuousBatcher:
         self.slots = batch_slots
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.remaining = np.zeros(batch_slots, np.int64)
-        self.queue: List[Request] = []
+        # deque: _refill pops from the head every decode step — list.pop(0)
+        # was O(queue) per refill
+        self.queue: Deque[Request] = deque()
         self.completed: List[Tuple[int, float]] = []
         self.tokens_out = 0
 
@@ -162,7 +193,7 @@ class ContinuousBatcher:
     def _refill(self):
         for i in range(self.slots):
             if self.active[i] is None and self.queue:
-                r = self.queue.pop(0)
+                r = self.queue.popleft()
                 self.active[i] = r
                 self.remaining[i] = r.gen_len
 

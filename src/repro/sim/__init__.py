@@ -1,8 +1,16 @@
-"""repro.sim — discrete-event simulator of the paper's experiment campaign."""
+"""repro.sim — discrete-event simulator of the paper's experiment campaign.
+
+Simulation engines are pluggable (``repro.sim.backends``): the reference
+Python event loop and a batched vmapped JAX engine share one protocol, one
+event cap, and one noise model contract.
+"""
 
 from .systems import SYSTEMS, SystemModel, get_system
-from .workloads import APPLICATIONS, Application, LoopProfile, get_application
+from .workloads import (APPLICATIONS, Application, LoopProfile, ProfileStack,
+                        get_application, stack_prefix_grids)
 from .engine import InstanceResult, run_instance
+from .backends import (EVENT_CAP, BatchResult, InstanceSpec, SimBackend,
+                       backend_names, get_backend, register_backend)
 from .campaign import (CampaignResult, FixedRun, PortfolioSweep, SelectorRun,
                        run_campaign_cell, run_fixed, run_selector,
                        sweep_portfolio, chunk_param_for, CHUNK_MODES,
@@ -10,7 +18,10 @@ from .campaign import (CampaignResult, FixedRun, PortfolioSweep, SelectorRun,
 
 __all__ = [
     "SYSTEMS", "SystemModel", "get_system", "APPLICATIONS", "Application",
-    "LoopProfile", "get_application", "InstanceResult", "run_instance",
+    "LoopProfile", "ProfileStack", "stack_prefix_grids", "get_application",
+    "InstanceResult",
+    "run_instance", "EVENT_CAP", "BatchResult", "InstanceSpec", "SimBackend",
+    "backend_names", "get_backend", "register_backend",
     "CampaignResult", "FixedRun", "PortfolioSweep", "SelectorRun",
     "run_campaign_cell", "run_fixed", "run_selector", "sweep_portfolio",
     "chunk_param_for", "CHUNK_MODES", "SELECTOR_GRID",

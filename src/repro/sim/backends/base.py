@@ -1,0 +1,97 @@
+"""Simulation-backend protocol: the contract every DES engine implements.
+
+A backend evaluates loop instances — one at a time (``run_instance``, the
+selector path) or as a whole batch (``run_batch``, the campaign path) — and
+what-if dispatch waves for the serving layer (``what_if_wave``).  The
+campaign, serving dispatcher, and benchmarks only ever talk to this surface,
+so engines are interchangeable: the reference Python event loop
+(``backends.python``) and the batched vmapped JAX engine
+(``backends.jax_batched``) must agree noise-free (``tests/test_backends.py``).
+
+``EVENT_CAP`` is the *shared* event budget: both backends switch SS /
+StaticSteal to the analytic closed form when one instance would exceed it,
+so the cutover point is identical everywhere (the paper's STREAM blowup is
+always computed analytically, never stepped).
+"""
+
+from __future__ import annotations
+
+import abc
+import zlib
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: Max dispatch events one instance may generate before SS/StaticSteal go
+#: analytic.  Single source of truth — ``engine.EVENT_CAP`` and
+#: ``engine_jax.MAX_EVENTS`` are re-exports of this value.
+EVENT_CAP = 120_000
+
+
+def needs_closed_form(alg: int, N: int, chunk_param: int,
+                      cap: int = EVENT_CAP) -> bool:
+    """True when a constant-chunk algorithm (SS/StaticSteal) would blow the
+    event budget and must be evaluated with the analytic closed form."""
+    if alg not in (1, 5):
+        return False
+    c_floor = max(1, chunk_param)
+    return N / c_floor > cap
+
+
+@dataclass(frozen=True)
+class InstanceSpec:
+    """One loop instance inside a batch: which profile, which algorithm,
+    which chunk parameter, and the full rng seed tuple (the campaign's
+    crc32-label convention).  ``fold_seed`` collapses the tuple into one
+    stateless uint32 for counter-based (JAX) rng streams."""
+
+    profile_id: int
+    alg: int
+    chunk_param: int
+    seed: Tuple[int, ...]
+
+    def fold_seed(self) -> int:
+        return zlib.crc32(np.asarray(self.seed, dtype=np.int64).tobytes())
+
+
+@dataclass
+class BatchResult:
+    """Per-instance outputs in spec order."""
+
+    loop_time: np.ndarray      # (B,)
+    lib: np.ndarray            # (B,)
+    n_chunks: np.ndarray       # (B,) int
+
+
+class SimBackend(abc.ABC):
+    """Protocol for pluggable simulation engines."""
+
+    name: str = "base"
+    event_cap: int = EVENT_CAP
+
+    @abc.abstractmethod
+    def run_instance(self, profile, system, alg: int, chunk_param: int,
+                     rng, record_chunks: bool = False):
+        """Simulate one loop instance; returns an ``InstanceResult``."""
+
+    @abc.abstractmethod
+    def run_batch(self, profiles: Sequence, system,
+                  specs: Sequence[InstanceSpec]) -> BatchResult:
+        """Evaluate a batch of instances over a shared profile set."""
+
+    @abc.abstractmethod
+    def what_if_wave(self, prefix: np.ndarray, n_replicas: int,
+                     init_avail: np.ndarray, h: float, fixed: float,
+                     algs: Sequence[int], chunk_param: int = 0
+                     ) -> np.ndarray:
+        """Predicted wave makespan for each candidate algorithm.
+
+        ``prefix``: (N+1,) cumulative request cost (token cost model);
+        ``init_avail``: (R,) current replica busy-offsets; ``h`` the
+        dispatch overhead per self-assigned chunk; ``fixed`` the cost
+        model's per-batch constant (paid by every chunk, including
+        STATIC's pre-assigned ranges, which skip ``h``).  Returns one
+        makespan per entry of ``algs`` — the serving policy's batched
+        what-if query (SimAS-style online consultation).
+        """

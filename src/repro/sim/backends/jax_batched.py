@@ -1,0 +1,424 @@
+"""Batched vmapped JAX simulation backend — campaign-scale sweeps in a
+handful of jitted calls.
+
+Where the reference engine steps one Python event loop per instance, this
+backend evaluates *whole batches* of instances — (algorithm x chunk-mode x
+rep x time-step) — at once:
+
+1.  Chunk schedules are precomputed through ``repro.core.jaxsched``
+    (non-adaptive algorithms exactly; AWF-*/mAF via their telemetry-free
+    surrogate recurrences; StaticSteal via the quantum-serving replay that
+    yields explicit (start, size, pe) triples) and cached by
+    (alg, N, P, chunk_param) — one schedule serves every rep and time-step.
+2.  Per-chunk costs come from ONE gathered linear interpolation over the
+    stacked prefix grids of all profiles in the batch.
+3.  The event loop itself is a ``lax.while_loop`` over per-PE finish times
+    (argmin assignment, exactly the reference heap policy: one entry per PE,
+    ties to the lowest index), ``vmap``-ed over the batch — all lanes step
+    together, so wall-clock is the *longest* schedule, not the sum.
+
+STATIC and over-``EVENT_CAP`` SS/StaticSteal instances are delegated to the
+reference closed forms with the *same* numpy rng streams, so those results
+are bit-identical to the Python backend.  Event-loop instances draw their
+jitter/speed/noise from counter-based JAX streams folded statelessly from
+the campaign's crc32 seed tuples — reproducible across processes and batch
+orders, but a *different* (equally valid) noise realization than numpy.
+
+Accuracy contract (see tests/test_backends.py): noise-free, the chunk
+sequences and makespans match the Python backend exactly for the
+non-adaptive algorithms and StaticSteal on uniform loops; the adaptive
+family follows its constant-telemetry surrogate — faithful when per-chunk
+rates are homogeneous, approximate under strong noise/imbalance.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ...core.jaxsched import chunk_schedule, staticsteal_schedule
+from ..workloads import stack_prefix_grids
+from .base import (EVENT_CAP, BatchResult, InstanceSpec, SimBackend,
+                   needs_closed_form)
+from .python import InstanceResult, _h_eff, run_instance as _py_run_instance
+
+#: lax.while_loop buffer buckets for schedule length (powers of four keep
+#: jit recompiles bounded); the last bucket must exceed EVENT_CAP plus
+#: StaticSteal's steal-split slack.
+_K_BUCKETS = (256, 1024, 4096, 16384, 65536, 262144)
+#: max elements per (B, K) device array in one call (~16 MB float32)
+_MAX_ELEMS = 1 << 22
+
+
+def _next_bucket(n: int) -> int:
+    for b in _K_BUCKETS:
+        if n <= b:
+            return b
+    raise ValueError(f"schedule length {n} exceeds largest bucket")
+
+
+def _pow2_rows(n: int) -> int:
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+# ---------------------------------------------------------------------------
+# jitted cores (module-level so the compile cache is shared across backends)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _batched_events(P: int, grids, grid_id, inv_n, starts, sizes, loc,
+                    count, forced, seeds, h_eff, bcost,
+                    sigma, jitter_max, speed_spread):
+    """vmapped event loop: one lane per instance.
+
+    grids (S, G+1) f32; per-lane arrays: grid_id (B,), inv_n (B,),
+    starts/sizes (B, K) i32, loc (B, K) f32, count (B,), forced (B, K) i32
+    (-1 = argmin assignment), seeds (B,) u32, h_eff/bcost (B,).
+    Returns (makespan (B,), lib (B,), finish (B, P)).
+    """
+    G = grids.shape[1] - 1
+
+    def one(gid, inv_n, starts, sizes, loc, cnt, forced, seed, h_eff, bc):
+        def pref(x):
+            pos = x.astype(jnp.float32) * (G * inv_n)
+            i = jnp.clip(pos.astype(jnp.int32), 0, G - 1)
+            lo = grids[gid, i]
+            return lo + (pos - i) * (grids[gid, i + 1] - lo)
+
+        costs = pref(starts + sizes) - pref(starts)
+        key = jax.random.PRNGKey(seed)
+        kj, ks, kn = jax.random.split(key, 3)
+        jitter = jax.random.uniform(kj, (P,)) * jitter_max
+        speed = jnp.clip(1.0 + speed_spread * jax.random.normal(ks, (P,)),
+                         0.8, 1.25)
+        noise = jnp.exp(sigma * jax.random.normal(kn, costs.shape))
+        eff = costs * loc * noise
+
+        def body(carry):
+            i, fin = carry
+            pe = jnp.where(forced[i] >= 0, forced[i], jnp.argmin(fin))
+            fin = fin.at[pe].add(h_eff + eff[i] * speed[pe] + bc)
+            return i + 1, fin
+
+        _, fin = lax.while_loop(lambda c: c[0] < cnt, body,
+                                (jnp.asarray(0, jnp.int32), jitter))
+        mk = fin.max()
+        lib = jnp.where(mk > 0.0, (1.0 - fin.mean() / mk) * 100.0, 0.0)
+        return mk, lib, fin
+
+    return jax.vmap(one, in_axes=(0,) * 10)(
+        grid_id, inv_n, starts, sizes, loc, count, forced, seeds,
+        h_eff, bcost)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _wave_eval(R: int, prefix, starts, sizes, count, forced, init_avail, h):
+    """Batched what-if: candidate schedules over one request-cost prefix.
+
+    prefix (N+1,), per-candidate starts/sizes/forced (A, K) i32 with exact
+    integer indexing (no interpolation), init_avail (R,) busy offsets.
+    """
+    def one(starts, sizes, cnt, forced):
+        costs = prefix[starts + sizes] - prefix[starts]
+
+        def body(carry):
+            i, avail = carry
+            pe = jnp.where(forced[i] >= 0, forced[i], jnp.argmin(avail))
+            avail = avail.at[pe].add(h + costs[i])
+            return i + 1, avail
+
+        _, avail = lax.while_loop(lambda c: c[0] < cnt, body,
+                                  (jnp.asarray(0, jnp.int32), init_avail))
+        return avail.max()
+
+    return jax.vmap(one)(starts, sizes, count, forced)
+
+
+# ---------------------------------------------------------------------------
+# backend
+# ---------------------------------------------------------------------------
+
+class JaxBatchedBackend(SimBackend):
+    """Campaign-scale batched engine (see module docstring)."""
+
+    name = "jax"
+
+    def __init__(self):
+        # (alg, N, P, cp) -> sizes ndarray, for central-queue algorithms
+        self._sched_cache: Dict[Tuple, np.ndarray] = {}
+        # StaticSteal replays keyed additionally by the cost/locality params
+        self._steal_cache: Dict[Tuple, Tuple] = {}
+
+    # ---- schedule precompute ---------------------------------------------
+
+    def _central_schedule(self, alg: int, N: int, P: int, cp: int,
+                          cache: bool = True) -> np.ndarray:
+        key = (alg, N, P, cp)
+        hit = self._sched_cache.get(key)
+        if hit is not None:
+            return hit
+        guess = -(-N // max(1, cp)) if alg == 1 else 256
+        mc = _next_bucket(min(guess, _K_BUCKETS[-1]))
+        while True:
+            sizes, count = chunk_schedule(alg, N, P, cp, max_chunks=mc)
+            # slice host-side: eager jnp slicing compiles per output shape
+            sizes = np.asarray(sizes, dtype=np.int64)[: int(count)]
+            if sizes.sum() == N or mc >= _K_BUCKETS[-1]:
+                break
+            mc = _next_bucket(mc + 1)       # truncated: retry wider buffer
+        if sizes.sum() != N:
+            raise RuntimeError(
+                f"schedule truncated: alg={alg} N={N} P={P} cp={cp}")
+        if cache:
+            self._sched_cache[key] = sizes
+        return sizes
+
+    def _steal_schedule(self, N: int, P: int, cp: int, profile, system,
+                        cache: bool = True):
+        unit = profile.total / N
+        key = (N, P, cp, round(unit, 18), round(profile.locality_sens, 6),
+               profile.c_loc, round(profile.memory_bound, 6), system.name)
+        hit = self._steal_cache.get(key)
+        if hit is not None:
+            return hit
+        ls = profile.locality_sens
+        mc = _next_bucket(min(-(-N // max(1, cp)) + 8 * P * 34,
+                              _K_BUCKETS[-1]))
+        while True:
+            starts, sizes, pes, own, count = staticsteal_schedule(
+                N, P, cp, max_chunks=mc, unit=unit, h=system.h,
+                bcost=profile.memory_bound * system.boundary_cost,
+                base_infl=1.0 + ls * system.dyn_locality,
+                amp=ls * system.loc_amp, c_loc=float(profile.c_loc))
+            count = int(count)
+            sizes_np = np.asarray(sizes, dtype=np.int64)[:count]
+            if sizes_np.sum() == N or mc >= _K_BUCKETS[-1]:
+                break
+            mc = _next_bucket(mc + 1)
+        if sizes_np.sum() != N:
+            raise RuntimeError(f"steal schedule truncated: N={N} P={P}")
+        out = (np.asarray(starts, np.int32)[:count],
+               sizes_np.astype(np.int32),
+               np.asarray(pes, np.int32)[:count],
+               np.asarray(own)[:count])
+        if cache:
+            self._steal_cache[key] = out
+        return out
+
+    def _event_rows(self, spec: InstanceSpec, profile, system):
+        """(starts, sizes, loc, forced) numpy rows for one event instance."""
+        N, P = profile.N, system.P
+        ls = profile.locality_sens
+        base_infl = 1.0 + ls * system.dyn_locality
+        amp = ls * system.loc_amp
+        c_loc = profile.c_loc
+        if spec.alg == 5:
+            starts, sizes, pes, own = self._steal_schedule(
+                N, P, spec.chunk_param, profile, system)
+            loc = np.where(own, 1.0,
+                           base_infl + amp * c_loc / (sizes + c_loc))
+            return starts, sizes, loc.astype(np.float32), pes
+        sizes = self._central_schedule(spec.alg, N, P, spec.chunk_param)
+        starts = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int32)
+        loc = (base_infl + amp * c_loc / (sizes + c_loc)).astype(np.float32)
+        return starts, sizes.astype(np.int32), loc, None
+
+    # ---- batch execution --------------------------------------------------
+
+    def run_batch(self, profiles: Sequence, system,
+                  specs: Sequence[InstanceSpec]) -> BatchResult:
+        B = len(specs)
+        lt = np.zeros(B)
+        lib = np.zeros(B)
+        nc = np.zeros(B, np.int64)
+        event_ids: List[int] = []
+        for i, s in enumerate(specs):
+            profile = profiles[s.profile_id]
+            if s.alg == 0 or needs_closed_form(s.alg, profile.N,
+                                               s.chunk_param):
+                rng = np.random.default_rng(s.seed)
+                r = _py_run_instance(profile, system, s.alg, s.chunk_param,
+                                     rng)
+                lt[i], lib[i], nc[i] = r.loop_time, r.lib, r.n_chunks
+            else:
+                event_ids.append(i)
+        if event_ids:
+            mks, libs, _, counts = self._run_events(
+                profiles, system, [specs[i] for i in event_ids])
+            for j, i in enumerate(event_ids):
+                lt[i], lib[i], nc[i] = mks[j], libs[j], counts[j]
+        return BatchResult(loop_time=lt, lib=lib, n_chunks=nc)
+
+    def _run_events(self, profiles, system, specs):
+        """Evaluate event-loop instances; returns (mk, lib, finish, count)
+        arrays in spec order."""
+        P = system.P
+        grids = stack_prefix_grids(profiles)
+        # pad the profile axis to a bucket: a different number of (t, loop)
+        # rows must not recompile _batched_events (padding rows are never
+        # gathered — grid_id only points at real profiles)
+        Sp = _pow2_rows(len(profiles))
+        if Sp > len(profiles):
+            grids = np.vstack([grids, np.zeros((Sp - len(profiles),
+                                                grids.shape[1]), np.float32)])
+        grids_dev = jnp.asarray(grids)
+        rows = [self._event_rows(s, profiles[s.profile_id], system)
+                for s in specs]
+        counts = np.array([len(r[1]) for r in rows], np.int32)
+        B = len(specs)
+        mk = np.zeros(B)
+        lb = np.zeros(B)
+        fin = np.zeros((B, P))
+
+        by_bucket: Dict[int, List[int]] = {}
+        for i, c in enumerate(counts):
+            by_bucket.setdefault(_next_bucket(int(c)), []).append(i)
+
+        for K, ids in sorted(by_bucket.items()):
+            max_rows = max(8, _MAX_ELEMS // K)
+            for off in range(0, len(ids), max_rows):
+                sub = ids[off:off + max_rows]
+                Bp = _pow2_rows(len(sub))
+                starts = np.zeros((Bp, K), np.int32)
+                sizes = np.zeros((Bp, K), np.int32)
+                loc = np.zeros((Bp, K), np.float32)
+                forced = np.full((Bp, K), -1, np.int32)
+                gid = np.zeros(Bp, np.int32)
+                inv_n = np.ones(Bp, np.float32)
+                cnt = np.zeros(Bp, np.int32)
+                seeds = np.zeros(Bp, np.uint32)
+                h_eff = np.zeros(Bp, np.float32)
+                bcost = np.zeros(Bp, np.float32)
+                for j, i in enumerate(sub):
+                    s = specs[i]
+                    profile = profiles[s.profile_id]
+                    st, sz, lc, pes = rows[i]
+                    n = len(sz)
+                    starts[j, :n], sizes[j, :n], loc[j, :n] = st, sz, lc
+                    if pes is not None:
+                        forced[j, :n] = pes
+                    gid[j] = s.profile_id
+                    inv_n[j] = 1.0 / profile.N
+                    cnt[j] = n
+                    seeds[j] = s.fold_seed()
+                    h_eff[j] = _h_eff(system, s.alg)
+                    bcost[j] = profile.memory_bound * system.boundary_cost
+                m, l, f = _batched_events(
+                    P, grids_dev, jnp.asarray(gid), jnp.asarray(inv_n),
+                    jnp.asarray(starts), jnp.asarray(sizes),
+                    jnp.asarray(loc), jnp.asarray(cnt), jnp.asarray(forced),
+                    jnp.asarray(seeds), jnp.asarray(h_eff),
+                    jnp.asarray(bcost), np.float32(system.noise_sigma),
+                    np.float32(system.jitter), np.float32(system.speed_spread))
+                m, l, f = np.asarray(m), np.asarray(l), np.asarray(f)
+                for j, i in enumerate(sub):
+                    mk[i], lb[i], fin[i] = m[j], l[j], f[j]
+        return mk, lb, fin, counts
+
+    # ---- single instance (selector path) ----------------------------------
+
+    def run_instance(self, profile, system, alg: int, chunk_param: int,
+                     rng, record_chunks: bool = False) -> InstanceResult:
+        if alg == 0 or needs_closed_form(alg, profile.N, chunk_param):
+            return _py_run_instance(profile, system, alg, chunk_param, rng,
+                                    record_chunks)
+        # stateless fold seed drawn from the caller's stream so repeated
+        # calls stay reproducible AND distinct
+        seed = (int(rng.integers(0, 2**31 - 1)),)
+        spec = InstanceSpec(profile_id=0, alg=alg, chunk_param=chunk_param,
+                            seed=seed)
+        mk, lib, fin, counts = self._run_events([profile], system, [spec])
+        sizes = None
+        if record_chunks:
+            _, sz, _, _ = self._event_rows(spec, profile, system)
+            sizes = [int(c) for c in sz]
+        return InstanceResult(loop_time=float(mk[0]), finish=fin[0],
+                              n_chunks=int(counts[0]), chunk_sizes=sizes)
+
+    # ---- serving what-if ---------------------------------------------------
+
+    def what_if_wave(self, prefix: np.ndarray, n_replicas: int,
+                     init_avail: np.ndarray, h: float, fixed: float,
+                     algs: Sequence[int], chunk_param: int = 0
+                     ) -> np.ndarray:
+        N = len(prefix) - 1
+        R = n_replicas
+        out = np.zeros(len(algs))
+        batched: List[Tuple[int, np.ndarray, np.ndarray, Optional[np.ndarray]]] = []
+        for k, alg in enumerate(algs):
+            if alg == 0 and chunk_param <= 0:
+                bounds = np.linspace(0, N, R + 1).round().astype(int)
+                free = np.asarray(init_avail, dtype=np.float64).copy()
+                nonempty = np.diff(bounds) > 0
+                free[: R] += np.diff(prefix[bounds]) + fixed * nonempty
+                out[k] = free.max()
+                continue
+            # cache=False: wave sizes and mean costs drift per dispatch, so
+            # online what-ifs would fill the process-wide caches with
+            # never-reused entries
+            if alg == 5:
+                unit = float(prefix[-1] - prefix[0]) / max(N, 1)
+                st, sz, pes, _ = self._steal_schedule(
+                    N, R, chunk_param, _UniformStub(N, unit), _NoLocStub(),
+                    cache=False)
+                batched.append((k, st, sz, pes))
+            else:
+                sz = self._central_schedule(alg, N, R, chunk_param,
+                                            cache=False)
+                st = np.concatenate([[0], np.cumsum(sz)[:-1]])
+                batched.append((k, st.astype(np.int32),
+                                sz.astype(np.int32), None))
+        if batched:
+            # pad every dynamic shape to a power-of-two bucket: wave sizes
+            # drift per dispatch, and an online what-if must not recompile
+            # _wave_eval each call.  Padded prefix tail / schedule slots are
+            # never read (starts+sizes <= N, the loop stops at cnt).
+            K = _pow2_rows(max(len(b[2]) for b in batched))
+            Np = _pow2_rows(len(prefix))
+            A = len(batched)
+            prefix_p = np.zeros(Np, np.float32)
+            prefix_p[: len(prefix)] = prefix
+            starts = np.zeros((A, K), np.int32)
+            sizes = np.zeros((A, K), np.int32)
+            forced = np.full((A, K), -1, np.int32)
+            cnt = np.zeros(A, np.int32)
+            for j, (_, st, sz, pes) in enumerate(batched):
+                n = len(sz)
+                starts[j, :n], sizes[j, :n], cnt[j] = st, sz, n
+                if pes is not None:
+                    forced[j, :n] = pes
+            mks = np.asarray(_wave_eval(
+                R, jnp.asarray(prefix_p), jnp.asarray(starts),
+                jnp.asarray(sizes), jnp.asarray(cnt), jnp.asarray(forced),
+                jnp.asarray(np.asarray(init_avail), jnp.float32),
+                np.float32(h + fixed)))
+            for j, (k, *_rest) in enumerate(batched):
+                out[k] = mks[j]
+        return out
+
+
+class _UniformStub:
+    """Minimal profile stand-in for serving what-if StaticSteal replays."""
+
+    def __init__(self, N, unit):
+        self.N, self.unit = N, unit
+        self.total = N * unit
+        self.locality_sens = 0.0
+        self.c_loc = 64
+        self.memory_bound = 0.0
+
+
+class _NoLocStub:
+    name = "wave"
+    h = 0.0
+    boundary_cost = 0.0
+    dyn_locality = 0.0
+    loc_amp = 0.0

@@ -1,0 +1,337 @@
+"""Reference Python backend: discrete-event simulator of OpenMP self-scheduled
+loop execution (moved verbatim from ``repro.sim.engine``; behavior-identical).
+
+Reproduces the execution model of LB4OMP (paper §2): P threads arrive at a
+parallel loop with small jitter, self-assign chunks from a central queue
+(dynamic algorithms) or execute pre-assigned ranges (STATIC / StaticSteal),
+pay a dispatch overhead ``h`` per work request, and — on memory-bound loops —
+a locality penalty for dynamic assignment and per-chunk stream restarts.
+
+Three execution paths:
+
+* ``STATIC`` — closed form over pre-assigned (contiguous or round-robin)
+  ranges; no dispatch events.
+* constant-chunk closed form — SS / StaticSteal whose chunk floor would
+  generate more than ``EVENT_CAP`` dispatch events (e.g. SS on STREAM's 2e9
+  iterations: the paper's orders-of-magnitude blowup, computed analytically).
+* event loop — everything else (GSS/TSS/AutoLLVM/mFAC2/AWF-*/mAF and small-N
+  SS/StaticSteal): a heap of thread-available times; chunk sizes come from
+  the live algorithm objects, adaptive ones receive per-chunk telemetry.
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from ...core.portfolio import ChunkAlgorithm, make_algorithm
+from ...core.metrics import percent_load_imbalance
+from .base import (EVENT_CAP, BatchResult, InstanceSpec, SimBackend,
+                   needs_closed_form)
+
+H_ATOMIC_ADAPTIVE = 2.0      # h multiplier for atomic-path adaptive algs (C/E/mAF)
+MUTEX_ADAPTIVE = {7, 9}      # AWF-B, AWF-D: mutex-protected weight updates
+
+
+@dataclass
+class InstanceResult:
+    loop_time: float
+    finish: np.ndarray
+    n_chunks: int
+    lib: float = field(init=False)
+    chunk_sizes: Optional[List[int]] = None
+
+    def __post_init__(self):
+        self.lib = percent_load_imbalance(self.finish)
+
+
+def _thread_speeds(system, rng) -> np.ndarray:
+    s = 1.0 + rng.normal(0.0, system.speed_spread, system.P)
+    return np.clip(s, 0.8, 1.25)
+
+
+def _noise(system, rng, n: int = 1):
+    return np.exp(rng.normal(0.0, system.noise_sigma, n))
+
+
+def _h_eff(system, alg_idx: int) -> float:
+    if alg_idx in MUTEX_ADAPTIVE:
+        return system.h * system.h_adaptive_mult
+    if alg_idx in (8, 10, 11):          # AWF-C/E, mAF (atomic path)
+        return system.h * H_ATOMIC_ADAPTIVE
+    return system.h
+
+
+def run_instance(profile, system, alg_idx: int,
+                 chunk_param: int, rng, record_chunks: bool = False
+                 ) -> InstanceResult:
+    N = profile.N
+
+    if alg_idx == 0:
+        return _run_static(profile, system, chunk_param, rng, record_chunks)
+
+    if needs_closed_form(alg_idx, N, chunk_param):
+        return _run_constant_closed(profile, system, alg_idx,
+                                    max(1, chunk_param), rng)
+
+    return _run_events(profile, system, alg_idx, chunk_param, rng,
+                       record_chunks)
+
+
+# ---------------------------------------------------------------------------
+# STATIC: pre-assigned ranges, no dispatch events
+# ---------------------------------------------------------------------------
+
+def _run_static(profile, system, chunk_param, rng, record_chunks):
+    P, N, mb = system.P, profile.N, profile.memory_bound
+    jitter = rng.uniform(0.0, system.jitter, P)
+    speed = _thread_speeds(system, rng)
+
+    if chunk_param <= 0:
+        # P contiguous ranges of ceil/floor(N/P)
+        bounds = np.linspace(0, N, P + 1).round().astype(np.int64)
+        cost = np.diff(profile.prefix(bounds))
+        n_chunks = P
+        per_pe_chunks = np.ones(P)
+        sizes = np.diff(bounds).tolist() if record_chunks else None
+    else:
+        c = min(chunk_param, N)
+        n_chunks = -(-N // c)
+        if profile.uniform and n_chunks > 2_000_000:
+            # analytic round-robin on a uniform profile
+            base = np.full(P, profile.total / P)
+            cost = base
+            per_pe_chunks = np.full(P, n_chunks / P)
+            sizes = None
+        else:
+            bounds = np.arange(0, N + c, c, dtype=np.int64)
+            bounds[-1] = N
+            chunk_cost = np.diff(profile.prefix(bounds))
+            pe = np.arange(n_chunks) % P
+            cost = np.bincount(pe, weights=chunk_cost, minlength=P)
+            per_pe_chunks = np.bincount(pe, minlength=P).astype(np.float64)
+            sizes = np.diff(bounds).tolist() if record_chunks else None
+    # interleaved static chunks restart memory streams at every boundary and
+    # lose within-window reuse when chunks are smaller than c_loc (no dynamic
+    # first-touch loss though: the assignment repeats every time-step)
+    if chunk_param > 0:
+        infl = 1.0 + profile.locality_sens * system.loc_amp * (
+            profile.c_loc / (chunk_param + profile.c_loc))
+    else:
+        infl = 1.0
+    boundary = mb * system.boundary_cost * per_pe_chunks
+    agg_noise = np.exp(rng.normal(0.0, system.noise_sigma * 0.5, P))
+    finish = jitter + (cost * infl * speed * agg_noise) + boundary
+    return InstanceResult(loop_time=float(finish.max()), finish=finish,
+                          n_chunks=int(n_chunks), chunk_sizes=sizes)
+
+
+# ---------------------------------------------------------------------------
+# constant-chunk closed form (SS / StaticSteal with tiny chunks on huge N)
+# ---------------------------------------------------------------------------
+
+def _run_constant_closed(profile, system, alg_idx, c, rng):
+    P, N, mb = system.P, profile.N, profile.memory_bound
+    ls = profile.locality_sens
+    n_chunks = -(-N // c)
+    h = _h_eff(system, alg_idx)
+    work = profile.total * system.chunk_inflation(ls, c, profile.c_loc)
+    overhead_par = n_chunks * (h + mb * system.boundary_cost) / P
+    if alg_idx == 1:
+        # SS hits ONE central queue: beyond saturation the critical section
+        # serializes and the dispatch cost stops dividing by P (the paper's
+        # orders-of-magnitude blowup on STREAM).
+        overhead = max(overhead_par, n_chunks * h * system.h_serial_frac)
+    else:
+        # StaticSteal: per-thread deques, no central serialization
+        overhead = n_chunks * (h * 0.6 + mb * system.boundary_cost) / P
+    base = work / P + overhead
+    jitter = rng.uniform(0.0, system.jitter, P)
+    speed = _thread_speeds(system, rng)
+    agg_noise = np.exp(rng.normal(0.0, system.noise_sigma * 0.3, P))
+    # self-scheduling balances up to one chunk of spread
+    tail = rng.uniform(0.0, 1.0, P) * (work / n_chunks + h)
+    finish = jitter.mean() + base * speed * agg_noise + tail
+    return InstanceResult(loop_time=float(finish.max()), finish=finish,
+                          n_chunks=int(n_chunks))
+
+
+# ---------------------------------------------------------------------------
+# event loop
+# ---------------------------------------------------------------------------
+
+def _run_events(profile, system, alg_idx, chunk_param, rng, record_chunks):
+    P, N, mb = system.P, profile.N, profile.memory_bound
+    h = _h_eff(system, alg_idx)
+    alg = make_algorithm(alg_idx)
+    alg.reset(N, P, chunk_param)
+
+    jitter = rng.uniform(0.0, system.jitter, P)
+    speed = _thread_speeds(system, rng)
+    finish = jitter.copy()
+
+    heap = [(jitter[i], i) for i in range(P)]
+    heapq.heapify(heap)
+
+    steal_bounds = None
+    steal_ranges = None
+    if alg_idx == 5:   # StaticSteal needs iteration *identity* per PE
+        bounds = np.linspace(0, N, P + 1).round().astype(np.int64)
+        steal_bounds = bounds
+        steal_ranges = [[int(bounds[i]), int(bounds[i + 1])] for i in range(P)]
+
+    # fast scalar prefix lookup (avoids np.interp per-call overhead)
+    if profile.uniform:
+        unit = profile.unit
+
+        def pref(x):
+            return x * unit
+    else:
+        grid = profile.prefix_grid
+        gscale = len(grid[:-1]) / N    # GRID / N
+
+        def pref(x):
+            pos = x * gscale
+            i = int(pos)
+            if i >= len(grid) - 1:
+                return float(grid[-1])
+            lo = grid[i]
+            return float(lo + (pos - i) * (grid[i + 1] - lo))
+
+    # pre-drawn lognormal noise (scalar Generator calls are ~3us each)
+    noise_buf = np.exp(rng.normal(0.0, system.noise_sigma, 4096))
+    noise_i = 0
+
+    cursor = 0
+    events = 0
+    ls = profile.locality_sens
+    base_infl = 1.0 + ls * system.dyn_locality
+    amp = ls * system.loc_amp
+    c_loc = profile.c_loc
+    bcost = mb * system.boundary_cost
+    sizes: Optional[List[int]] = [] if record_chunks else None
+    pop, push = heapq.heappop, heapq.heappush
+
+    while alg.remaining > 0:
+        t, pe = pop(heap)
+        if alg_idx == 5:
+            c, a, b = _steal_next(alg, steal_ranges, pe)
+            if c == 0:
+                continue
+            own_range = steal_bounds[pe] <= a < steal_bounds[pe + 1]
+            loc = 1.0 if own_range else (base_infl + amp * c_loc / (c + c_loc))
+        else:
+            c = alg.next_chunk(pe)
+            if c == 0:
+                break
+            a, b = cursor, cursor + c
+            cursor += c
+            loc = base_infl + amp * c_loc / (c + c_loc)
+        raw = pref(b) - pref(a)
+        if noise_i >= 4096:
+            noise_buf = np.exp(rng.normal(0.0, system.noise_sigma, 4096))
+            noise_i = 0
+        exec_t = raw * loc * speed[pe] * noise_buf[noise_i] + bcost
+        noise_i += 1
+        alg.report(pe, c, exec_t, exec_t + h)
+        t_new = t + h + exec_t
+        finish[pe] = t_new
+        push(heap, (t_new, pe))
+        if sizes is not None:
+            sizes.append(c)
+        events += 1
+        if events > EVENT_CAP * 4:
+            raise RuntimeError(
+                f"event cap exceeded: alg={alg_idx} N={N} P={P} "
+                f"chunk_param={chunk_param}")
+
+    return InstanceResult(loop_time=float(finish.max()), finish=finish,
+                          n_chunks=events, chunk_sizes=sizes)
+
+
+def _steal_next(alg, ranges, pe):
+    """Range-aware StaticSteal: serve own range in quanta; steal the richer
+    half of the richest victim when empty.  Keeps ``alg`` bookkeeping in sync
+    so ``alg.remaining`` stays authoritative."""
+    q = max(1, alg.chunk_param)
+    lo, hi = ranges[pe]
+    if lo >= hi:
+        victim = max(range(alg.P), key=lambda i: ranges[i][1] - ranges[i][0])
+        vl, vh = ranges[victim]
+        if vh - vl <= 0:
+            return 0, 0, 0
+        half = (vh - vl + 1) // 2
+        ranges[victim][1] = vh - half      # victim keeps the front
+        ranges[pe] = [vh - half, vh]       # thief takes the back half
+        lo, hi = ranges[pe]
+    c = min(q, hi - lo)
+    ranges[pe][0] = lo + c
+    alg.remaining -= c
+    alg.scheduled += c
+    return c, lo, lo + c
+
+
+# ---------------------------------------------------------------------------
+# backend wrapper
+# ---------------------------------------------------------------------------
+
+class PythonBackend(SimBackend):
+    """The reference engine behind the ``SimBackend`` protocol."""
+
+    name = "python"
+
+    def run_instance(self, profile, system, alg: int, chunk_param: int,
+                     rng, record_chunks: bool = False) -> InstanceResult:
+        return run_instance(profile, system, alg, chunk_param, rng,
+                            record_chunks)
+
+    def run_batch(self, profiles: Sequence, system,
+                  specs: Sequence[InstanceSpec]) -> BatchResult:
+        B = len(specs)
+        lt = np.zeros(B)
+        lib = np.zeros(B)
+        nc = np.zeros(B, np.int64)
+        for i, s in enumerate(specs):
+            rng = np.random.default_rng(s.seed)
+            r = run_instance(profiles[s.profile_id], system, s.alg,
+                             s.chunk_param, rng)
+            lt[i], lib[i], nc[i] = r.loop_time, r.lib, r.n_chunks
+        return BatchResult(loop_time=lt, lib=lib, n_chunks=nc)
+
+    def what_if_wave(self, prefix: np.ndarray, n_replicas: int,
+                     init_avail: np.ndarray, h: float, fixed: float,
+                     algs: Sequence[int], chunk_param: int = 0
+                     ) -> np.ndarray:
+        """Greedy host replay of the serving dispatch loop per candidate —
+        mirrors ``DispatchSimulator.run_wave`` (adaptive algorithms run their
+        real telemetry-driven host classes here)."""
+        N = len(prefix) - 1
+        R = n_replicas
+        out = np.zeros(len(algs))
+        for k, alg_idx in enumerate(algs):
+            free = np.asarray(init_avail, dtype=np.float64).copy()
+            if alg_idx == 0 and chunk_param <= 0:
+                bounds = np.linspace(0, N, R + 1).round().astype(int)
+                for r in range(R):
+                    if bounds[r + 1] > bounds[r]:
+                        free[r] += fixed + prefix[bounds[r + 1]] \
+                            - prefix[bounds[r]]
+            else:
+                alg = make_algorithm(alg_idx)
+                alg.reset(N, R, chunk_param)
+                cursor = 0
+                while alg.remaining > 0:
+                    r = int(np.argmin(free))
+                    c = alg.next_chunk(r)
+                    if c <= 0:
+                        break
+                    dt = fixed + float(prefix[cursor + c] - prefix[cursor])
+                    cursor += c
+                    alg.report(r, c, dt, dt + h)
+                    free[r] += h + dt
+            out[k] = free.max()
+        return out

@@ -24,7 +24,7 @@ def _digest(label: str) -> int:
 
 from ..core import (ALGORITHM_NAMES, N_ALGORITHMS, SelectionService,
                     coefficient_of_variation, exp_chunk)
-from .engine import run_instance
+from .backends import InstanceSpec, get_backend
 from .systems import SYSTEMS, SystemModel, get_system
 from .workloads import APPLICATIONS, Application, get_application
 
@@ -54,34 +54,53 @@ class FixedRun:
         return float(self.times.sum())
 
 
-def run_fixed(app: Application, system: SystemModel, alg: int,
-              chunk_mode: str, T: Optional[int] = None, reps: int = 3,
-              seed: int = 0) -> FixedRun:
-    T = T or app.T
+def _run_portfolio(app: Application, system: SystemModel,
+                   pairs: List[Tuple[int, str]], T: int, reps: int,
+                   seed: int, backend=None) -> Dict[Tuple[int, str],
+                                                    "FixedRun"]:
+    """Evaluate every (alg, chunk_mode) pair over the app's time-stepped
+    loops through ONE backend batch (the campaign fan-out: alg x mode x
+    time-step x loop x rep).  Seed tuples are the historical per-instance
+    rng labels, so the Python backend reproduces ``run_fixed`` bit-exactly
+    and the JAX backend folds the same tuples into its stateless streams."""
+    bk = get_backend(backend)
     # time-invariant apps: simulate a window and tile (median statistics are
     # identical across steps; saves orders of magnitude of DES time)
     T_sim = min(T, 24) if app.time_invariant else T
-    n_loops = len(app.loop_names)
-    times = np.zeros((T_sim, n_loops))
-    libs = np.zeros((T_sim, n_loops))
-    for t in range(T_sim):
-        for li, profile in enumerate(app.loops(t)):
-            cp = chunk_param_for(chunk_mode, profile.N, system.P)
-            samples = []
-            for r in range(reps):
-                rng = np.random.default_rng(
-                    (seed, _digest(app.name), system.P, alg,
-                     _digest(chunk_mode), t, r))
-                res = run_instance(profile, system, alg, cp, rng)
-                samples.append((res.loop_time, res.lib))
-            lt = float(np.median([s[0] for s in samples]))
-            lb = float(np.median([s[1] for s in samples]))
-            times[t, li], libs[t, li] = lt, lb
-    if T_sim < T:
-        reps_needed = -(-T // T_sim)
-        times = np.tile(times, (reps_needed, 1))[:T]
-        libs = np.tile(libs, (reps_needed, 1))[:T]
-    return FixedRun(times=times, libs=libs)
+    stack = app.profile_stack(T_sim)
+    n_loops = stack.n_loops
+    specs: List[InstanceSpec] = []
+    for alg, mode in pairs:
+        for t in range(T_sim):
+            for li in range(n_loops):
+                pid = stack.pid(t, li)
+                cp = chunk_param_for(mode, stack.profiles[pid].N, system.P)
+                for r in range(reps):
+                    specs.append(InstanceSpec(
+                        profile_id=pid, alg=alg, chunk_param=cp,
+                        seed=(seed, _digest(app.name), system.P, alg,
+                              _digest(mode), t, r)))
+    res = bk.run_batch(stack.profiles, system, specs)
+    lt = res.loop_time.reshape(len(pairs), T_sim, n_loops, reps)
+    lb = res.lib.reshape(len(pairs), T_sim, n_loops, reps)
+    out = {}
+    for i, pair in enumerate(pairs):
+        times = np.median(lt[i], axis=-1)
+        libs = np.median(lb[i], axis=-1)
+        if T_sim < T:
+            reps_needed = -(-T // T_sim)
+            times = np.tile(times, (reps_needed, 1))[:T]
+            libs = np.tile(libs, (reps_needed, 1))[:T]
+        out[pair] = FixedRun(times=times, libs=libs)
+    return out
+
+
+def run_fixed(app: Application, system: SystemModel, alg: int,
+              chunk_mode: str, T: Optional[int] = None, reps: int = 3,
+              seed: int = 0, backend=None) -> FixedRun:
+    T = T or app.T
+    return _run_portfolio(app, system, [(alg, chunk_mode)], T, reps, seed,
+                          backend=backend)[(alg, chunk_mode)]
 
 
 @dataclass
@@ -106,6 +125,14 @@ class PortfolioSweep:
         arg = stack.argmin(axis=0)
         return lambda t: keys[arg[min(t, len(arg) - 1)]][0]
 
+    def oracle_argmin(self) -> np.ndarray:
+        """(T, n_loops) index into ``sorted run keys`` of the per-instance
+        winner — the Oracle's selection trace (backend-equivalence tests
+        compare these across engines)."""
+        keys = sorted(self.runs.keys(), key=str)
+        stack = np.stack([self.runs[k].times for k in keys])
+        return stack.argmin(axis=0)
+
     def cov(self) -> float:
         """Fig. 4: c.o.v. of loop execution time over every algorithm and
         chunk parameter."""
@@ -114,14 +141,18 @@ class PortfolioSweep:
 
 
 def sweep_portfolio(app_name: str, system_name: str, T: Optional[int] = None,
-                    reps: int = 3, seed: int = 0) -> PortfolioSweep:
+                    reps: int = 3, seed: int = 0,
+                    backend=None) -> PortfolioSweep:
+    """All 12 algorithms x 2 chunk modes, fanned into a single backend
+    batch (with ``backend="jax"`` the whole sweep is a handful of jitted
+    vmapped calls instead of tens of thousands of Python event loops)."""
     app = get_application(app_name)
     system = get_system(system_name)
-    runs = {}
-    for alg in range(N_ALGORITHMS):
-        for mode in CHUNK_MODES:
-            runs[(alg, mode)] = run_fixed(app, system, alg, mode, T=T,
-                                          reps=reps, seed=seed)
+    T_eff = T or app.T
+    pairs = [(alg, mode) for alg in range(N_ALGORITHMS)
+             for mode in CHUNK_MODES]
+    runs = _run_portfolio(app, system, pairs, T_eff, reps, seed,
+                          backend=backend)
     return PortfolioSweep(app=app_name, system=system_name, runs=runs)
 
 
@@ -153,13 +184,18 @@ class SelectorRun:
 def run_selector(app_name: str, system_name: str, selector: str,
                  chunk_mode: str = "default", reward: Optional[str] = None,
                  T: Optional[int] = None, seed: int = 0,
-                 sweep: Optional[PortfolioSweep] = None) -> SelectorRun:
+                 sweep: Optional[PortfolioSweep] = None,
+                 backend=None) -> SelectorRun:
     """Execute one selection method over the full time-stepped application.
 
     Every modified loop gets an independent policy via ``SelectionService``
     (LB4OMP loop ids); ``selector`` is any ``make_policy`` name, including
     "Hybrid" (expert-seeded RL) and "Oracle" (per-loop overrides carrying
-    the per-step best; ``sweep`` is required for it)."""
+    the per-step best; ``sweep`` is required for it).  The selection loop is
+    inherently sequential (each decision feeds on the previous instance's
+    telemetry), so ``backend`` here steers per-instance evaluation only —
+    the default Python engine is usually right."""
+    bk = get_backend(backend)
     app = get_application(app_name)
     system = get_system(system_name)
     T = T or app.T
@@ -183,8 +219,8 @@ def run_selector(app_name: str, system_name: str, selector: str,
                 # chunk mode fills the default
                 d = inst.decision.with_instance_defaults(
                     chunk_param_for(chunk_mode, profile.N, system.P))
-                res = run_instance(profile, system, d.action, d.chunk_param,
-                                   rng)
+                res = bk.run_instance(profile, system, d.action,
+                                      d.chunk_param, rng)
                 inst.report(loop_time=res.loop_time, lib=res.lib)
             total += res.loop_time
     # the service's per-region records ARE the selection traces
@@ -225,15 +261,22 @@ def run_campaign_cell(app_name: str, system_name: str,
                       T: Optional[int] = None, reps: int = 3,
                       seed: int = 0,
                       selectors=SELECTOR_GRID,
-                      chunk_modes=CHUNK_MODES) -> CampaignResult:
-    sweep = sweep_portfolio(app_name, system_name, T=T, reps=reps, seed=seed)
+                      chunk_modes=CHUNK_MODES,
+                      backend=None) -> CampaignResult:
+    """One Fig. 5 cell.  ``backend`` picks the simulation engine for the
+    heavy portfolio sweep (``"jax"`` batches it); the sequential selector
+    replays stay on the reference engine for exact-telemetry adaptivity."""
+    sweep = sweep_portfolio(app_name, system_name, T=T, reps=reps, seed=seed,
+                            backend=backend)
     T_eff = T or get_application(app_name).T
     runs = {}
     for mode in chunk_modes:
         for sel, reward in selectors:
+            # pinned to the reference engine (not the env default): the
+            # adaptive algorithms need real per-chunk telemetry here
             runs[(sel, mode, reward)] = run_selector(
                 app_name, system_name, sel, chunk_mode=mode, reward=reward,
-                T=T_eff, seed=seed, sweep=sweep)
+                T=T_eff, seed=seed, sweep=sweep, backend="python")
     oracle_total = float(sweep.oracle_times()[:T_eff].sum())
     return CampaignResult(app=app_name, system=system_name, sweep=sweep,
                           oracle_total=oracle_total, selector_runs=runs)

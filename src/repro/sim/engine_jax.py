@@ -6,8 +6,13 @@ algorithms (SS/GSS/AutoLLVM/TSS/mFAC2) — the form a JAX-native runtime would
 embed (e.g. inside a jitted dispatcher).  Event ordering uses argmin over
 the P thread-available times (P <= 128, cheap on-vector).
 
-Cross-validated against the Python engine in ``tests/test_engine_jax.py``
-(noise-free mode, exact chunk sequences + makespan within tolerance).
+For whole-campaign batches use ``repro.sim.backends.jax_batched`` — this
+module remains the minimal single-instance form.  ``MAX_EVENTS`` is the
+shared ``EVENT_CAP`` from the backend protocol, so this engine and the
+closed-form cutover agree on when SS/StaticSteal go analytic.
+
+Cross-validated against the Python engine in ``tests/test_extensions.py``
+(noise-free mode, chunk counts + makespan within tolerance).
 """
 
 from __future__ import annotations
@@ -19,8 +24,9 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..core.jaxsched import chunk_schedule
+from .backends.base import EVENT_CAP
 
-MAX_EVENTS = 16384
+MAX_EVENTS = EVENT_CAP
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3, 5))

@@ -26,6 +26,20 @@ import numpy as np
 GRID = 16384  # prefix-grid resolution
 
 
+def stack_prefix_grids(profiles) -> np.ndarray:
+    """(S, GRID+1) float32 stacked cumulative-cost grids — the device-ready
+    form the batched backend gathers from.  Uniform profiles synthesize a
+    linear ramp at the shared resolution so one interpolation serves all."""
+    rows = np.zeros((len(profiles), GRID + 1), np.float32)
+    for i, p in enumerate(profiles):
+        if p.prefix_grid is None:
+            rows[i] = np.linspace(0.0, p.total, GRID + 1, dtype=np.float32)
+        else:
+            assert len(p.prefix_grid) == GRID + 1, "mixed grid resolutions"
+            rows[i] = p.prefix_grid
+    return rows
+
+
 @dataclass
 class LoopProfile:
     """Cost model of one parallel loop at one time-step."""
@@ -68,6 +82,27 @@ def _grid_from_pattern(pattern: np.ndarray, N: int, unit: float) -> np.ndarray:
     return np.concatenate([[0.0], np.cumsum(bucket_cost)])
 
 
+@dataclass
+class ProfileStack:
+    """Device-ready view of an application's loops over a window of
+    time-steps: the flattened profile list plus the stacked prefix grids
+    the batched backend gathers from (one row per (t, loop), uniform
+    profiles synthesized as linear ramps at the shared resolution).
+
+    ``pid(t, li)`` maps a (time-step, loop-index) pair to its row.
+    """
+
+    profiles: List[LoopProfile]
+    n_loops: int
+
+    def pid(self, t: int, li: int) -> int:
+        return t * self.n_loops + li
+
+    def grids(self) -> np.ndarray:
+        """(S, GRID+1) float32 stacked cumulative-cost grids."""
+        return stack_prefix_grids(self.profiles)
+
+
 class Application:
     name: str = "app"
     T: int = 500
@@ -76,6 +111,14 @@ class Application:
 
     def loops(self, t: int) -> List[LoopProfile]:  # pragma: no cover
         raise NotImplementedError
+
+    def profile_stack(self, T: Optional[int] = None) -> ProfileStack:
+        """Flatten ``loops(t)`` for t in [0, T) into a ``ProfileStack``."""
+        T = T or self.T
+        profiles: List[LoopProfile] = []
+        for t in range(T):
+            profiles.extend(self.loops(t))
+        return ProfileStack(profiles=profiles, n_loops=len(self.loop_names))
 
 
 class Mandelbrot(Application):
