@@ -1,0 +1,135 @@
+"""Lockstep selector-replay shoot-out: sequential per-cell replays on the
+reference engine vs one multi-lane ``ReplayBatch`` on the JAX backend.
+
+This is the end-to-end Fig. 5 campaign bottleneck PR 2 left behind: the
+portfolio sweep already batches through ``run_batch``, but ``run_selector``
+stepped one cell at a time.  Per app-system pair the full selector grid
+(7 selectors x 2 chunk modes = 14 lanes) replays both ways; the speedup and
+a cross-engine selection-agreement score land in
+``results/bench_replay.json``.
+
+``--smoke`` is the CI acceptance gate: tiny T, asserts the lockstep JAX
+replay is >= 3x faster than the sequential reference on at least one pair,
+and still writes the JSON record (uploaded as a workflow artifact).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results")
+
+PAIRS = (("sphynx", "epyc"), ("tc", "epyc"), ("lulesh", "cascadelake"),
+         ("mandelbrot", "broadwell"))
+
+#: the smoke gate from ISSUE/ROADMAP: lockstep must beat sequential by this
+#: factor on at least one app-system pair
+SMOKE_SPEEDUP = 3.0
+
+
+def _selection_agreement(runs_a, runs_b) -> float:
+    """Fraction of (lane, loop, instance) selections on which the two
+    replays agree — a coarse cross-engine drift signal (RL exploration
+    phases are deterministic, so large grids score high even though late
+    exploit-phase picks may differ with the noise realization)."""
+    same = total = 0
+    for ra, rb in zip(runs_a, runs_b):
+        for nm in ra.history:
+            for ha, hb in zip(ra.history[nm], rb.history[nm]):
+                same += int(ha[0] == hb[0])
+                total += 1
+    return same / max(total, 1)
+
+
+def run(T: int = 16, seed: int = 0, pairs=PAIRS) -> dict:
+    from repro.sim import (CHUNK_MODES, CellSpec, ReplayBatch, SELECTOR_GRID,
+                           run_selector_sequential)
+
+    out = {}
+    for app, sysname in pairs:
+        lanes = [CellSpec(app, sysname, sel, mode, reward)
+                 for mode in CHUNK_MODES for sel, reward in SELECTOR_GRID]
+
+        t0 = time.perf_counter()
+        seq = [run_selector_sequential(s.app, s.system, s.selector,
+                                       chunk_mode=s.chunk_mode,
+                                       reward=s.reward, T=T, seed=seed,
+                                       backend="python")
+               for s in lanes]
+        t_py = time.perf_counter() - t0
+
+        # first JAX call pays jit compilation; a campaign of many cells sees
+        # the steady state, so warm up then measure
+        ReplayBatch(lanes, T=T, seed=seed, backend="jax").run()
+        t0 = time.perf_counter()
+        batched = ReplayBatch(lanes, T=T, seed=seed, backend="jax").run()
+        t_jax = time.perf_counter() - t0
+
+        out[f"{app}/{sysname}"] = {
+            "T": T, "lanes": len(lanes),
+            "sequential_python_s": round(t_py, 4),
+            "lockstep_jax_warm_s": round(t_jax, 4),
+            "speedup": round(t_py / max(t_jax, 1e-9), 2),
+            "selection_agreement": round(
+                _selection_agreement(batched, seq), 4),
+            "total_rel_diff_max": round(max(
+                abs(b.total - s.total) / max(s.total, 1e-12)
+                for b, s in zip(batched, seq)), 4),
+        }
+    return out
+
+
+def _write(res: dict) -> None:
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "bench_replay.json"), "w") as f:
+        json.dump(res, f, indent=2)
+
+
+def smoke() -> None:
+    """CI gate: two pairs at tiny T; the lockstep JAX replay must be >=
+    SMOKE_SPEEDUP x faster than sequential on at least one of them."""
+    res = run(T=8, pairs=(("sphynx", "epyc"), ("tc", "epyc")))
+    _write(res)
+    best = max(r["speedup"] for r in res.values())
+    for pair, r in res.items():
+        print(f"smoke replay {pair}: seq={r['sequential_python_s']}s "
+              f"lockstep={r['lockstep_jax_warm_s']}s "
+              f"speedup={r['speedup']}x agree={r['selection_agreement']}")
+    assert best >= SMOKE_SPEEDUP, \
+        f"lockstep replay speedup {best}x < {SMOKE_SPEEDUP}x gate"
+    print(f"smoke: lockstep replay {best}x >= {SMOKE_SPEEDUP}x")
+
+
+def main() -> list:
+    res = run()
+    _write(res)
+    rows = []
+    for pair, r in res.items():
+        rows.append((f"replay_{pair.replace('/', '_')}",
+                     r["lockstep_jax_warm_s"] * 1e6,
+                     f"speedup={r['speedup']}x,"
+                     f"agree={r['selection_agreement']:.2f}"))
+    best = max(r["speedup"] for r in res.values())
+    rows.append(("replay_best_speedup", 0.0, f"{best}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    # allow `python benchmarks/bench_replay.py` from the repo root
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for row in main():
+            print(f"{row[0]},{row[1]:.3f},{row[2]}")

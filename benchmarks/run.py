@@ -29,8 +29,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_anova, bench_autotune, bench_backends, bench_chunks,
-                   bench_cov, bench_degradation, bench_roofline,
-                   bench_serving, bench_traces)
+                   bench_cov, bench_degradation, bench_replay,
+                   bench_roofline, bench_serving, bench_traces)
     benches = {
         "chunks": bench_chunks.main,
         "cov": bench_cov.main,
@@ -41,6 +41,7 @@ def main() -> None:
         "autotune": bench_autotune.main,
         "roofline": bench_roofline.main,
         "backends": bench_backends.main,
+        "replay": bench_replay.main,
     }
     if args.only:
         benches = {args.only: benches[args.only]}

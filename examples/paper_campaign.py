@@ -3,11 +3,16 @@ scale and print the degradation-vs-Oracle table.
 
     PYTHONPATH=src python examples/paper_campaign.py                 # subset
     PYTHONPATH=src python examples/paper_campaign.py --apps all --T 500
+
+All requested cells run through ONE ``run_campaign`` call: the portfolio
+sweeps batch per cell, and every cell's selector lanes replay in lockstep
+(``--selector-backend jax`` batches the replays too; the default keeps them
+on the reference engine for exact per-chunk telemetry).
 """
 
 import argparse
 
-from repro.sim import APPLICATIONS, SYSTEMS, run_campaign_cell
+from repro.sim import APPLICATIONS, SYSTEMS, run_campaign
 
 
 def main():
@@ -19,28 +24,32 @@ def main():
     ap.add_argument("--backend", default=None,
                     help="simulation backend for the portfolio sweeps "
                          "(python | jax; default REPRO_SIM_BACKEND)")
+    ap.add_argument("--selector-backend", default="python",
+                    help="backend for the lockstep selector replays "
+                         "(python = exact telemetry; jax = batched lanes)")
     args = ap.parse_args()
 
     apps = (list(APPLICATIONS) if args.apps == "all"
             else args.apps.split(","))
     systems = (list(SYSTEMS) if args.systems == "all"
                else args.systems.split(","))
+    cells = [(app, system) for app in apps for system in systems]
 
-    for app in apps:
-        for system in systems:
-            cell = run_campaign_cell(app, system, T=args.T, reps=args.reps,
-                                     backend=args.backend)
-            print(f"\n=== {app} on {system} ===   "
-                  f"Oracle={cell.oracle_total:.2f}s  "
-                  f"c.o.v.={cell.sweep.cov():.3f}")
-            for k, d in sorted(cell.degradation().items(),
-                               key=lambda kv: kv[1]):
-                sel, mode, reward = k
-                r = cell.selector_runs[k]
-                shares = r.selection_shares()
-                top = max(shares, key=shares.get) if shares else "-"
-                tag = f"{sel}+{reward}" if reward else sel
-                print(f"  {tag:15s} {mode:9s} {d:+7.1f}%   mostly->{top}")
+    results = run_campaign(cells, T=args.T, reps=args.reps,
+                           backend=args.backend,
+                           selector_backend=args.selector_backend)
+    for (app, system), cell in results.items():
+        print(f"\n=== {app} on {system} ===   "
+              f"Oracle={cell.oracle_total:.2f}s  "
+              f"c.o.v.={cell.sweep.cov():.3f}")
+        for k, d in sorted(cell.degradation().items(),
+                           key=lambda kv: kv[1]):
+            sel, mode, reward = k
+            r = cell.selector_runs[k]
+            shares = r.selection_shares()
+            top = max(shares, key=shares.get) if shares else "-"
+            tag = f"{sel}+{reward}" if reward else sel
+            print(f"  {tag:15s} {mode:9s} {d:+7.1f}%   mostly->{top}")
 
 
 if __name__ == "__main__":

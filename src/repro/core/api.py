@@ -85,6 +85,19 @@ class Observation:
         kw.setdefault("tail_latency", float(np.percentile(times, 95)))
         return cls(pe_times=tuple(float(t) for t in times), **kw)
 
+    @classmethod
+    def batch(cls, loop_times, libs=None) -> List["Observation"]:
+        """Vectorized construction from a batched backend result: one
+        observation per lane instance, in array order (the lockstep replay's
+        learn phase scatters these back to each lane's policy).  ``instance``
+        is left unset (-1); the region service stamps its own counter when
+        the observation is reported."""
+        lt = np.asarray(loop_times, dtype=np.float64)
+        lb = np.zeros_like(lt) if libs is None \
+            else np.asarray(libs, dtype=np.float64)
+        return [cls(loop_time=float(t), lib=float(b))
+                for t, b in zip(lt, lb)]
+
 
 @dataclass(frozen=True)
 class Decision:

@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import zlib
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, Hashable, List, Optional, Tuple
 
 from .api import Decision, Observation, SelectionPolicy, make_policy
@@ -102,6 +102,9 @@ class RegionInstance:
         enough (makespan / Eq. 8 LIB / p95 are derived, but any signal the
         caller supplies explicitly wins over the derived value)."""
         if observation is not None:
+            if observation.instance < 0:
+                observation = replace(observation,
+                                      instance=self._record.instances)
             self._obs = observation
         elif pe_times is not None:
             extra = {"throughput": throughput,

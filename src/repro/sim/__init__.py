@@ -9,21 +9,27 @@ from .systems import SYSTEMS, SystemModel, get_system
 from .workloads import (APPLICATIONS, Application, LoopProfile, ProfileStack,
                         get_application, stack_prefix_grids)
 from .engine import InstanceResult, run_instance
-from .backends import (EVENT_CAP, BatchResult, InstanceSpec, SimBackend,
-                       backend_names, get_backend, register_backend)
-from .campaign import (CampaignResult, FixedRun, PortfolioSweep, SelectorRun,
+from .backends import (EVENT_CAP, BatchResult, InstanceSpec, LockstepRequest,
+                       SimBackend, backend_names, get_backend,
+                       register_backend)
+from .campaign import (CampaignResult, CellSpec, FixedRun, PortfolioSweep,
+                       ReplayBatch, SelectorRun, run_campaign,
                        run_campaign_cell, run_fixed, run_selector,
-                       sweep_portfolio, chunk_param_for, CHUNK_MODES,
-                       SELECTOR_GRID, EXTENDED_SELECTOR_GRID)
+                       run_selector_sequential, sweep_portfolio,
+                       chunk_param_for, CHUNK_MODES, SELECTOR_GRID,
+                       EXTENDED_SELECTOR_GRID)
 
 __all__ = [
     "SYSTEMS", "SystemModel", "get_system", "APPLICATIONS", "Application",
     "LoopProfile", "ProfileStack", "stack_prefix_grids", "get_application",
     "InstanceResult",
-    "run_instance", "EVENT_CAP", "BatchResult", "InstanceSpec", "SimBackend",
+    "run_instance", "EVENT_CAP", "BatchResult", "InstanceSpec",
+    "LockstepRequest", "SimBackend",
     "backend_names", "get_backend", "register_backend",
-    "CampaignResult", "FixedRun", "PortfolioSweep", "SelectorRun",
-    "run_campaign_cell", "run_fixed", "run_selector", "sweep_portfolio",
+    "CampaignResult", "CellSpec", "FixedRun", "PortfolioSweep",
+    "ReplayBatch", "SelectorRun",
+    "run_campaign", "run_campaign_cell", "run_fixed", "run_selector",
+    "run_selector_sequential", "sweep_portfolio",
     "chunk_param_for", "CHUNK_MODES", "SELECTOR_GRID",
     "EXTENDED_SELECTOR_GRID",
 ]

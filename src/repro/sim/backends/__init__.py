@@ -16,8 +16,8 @@ from __future__ import annotations
 import os
 from typing import Callable, Dict, Optional, Union
 
-from .base import (EVENT_CAP, BatchResult, InstanceSpec, SimBackend,
-                   needs_closed_form)
+from .base import (EVENT_CAP, BatchResult, InstanceSpec, LockstepRequest,
+                   SimBackend, needs_closed_form)
 
 _FACTORIES: Dict[str, Callable[[], SimBackend]] = {}
 _INSTANCES: Dict[str, SimBackend] = {}
@@ -64,7 +64,7 @@ register_backend("python", _make_python)
 register_backend("jax", _make_jax)
 
 __all__ = [
-    "EVENT_CAP", "BatchResult", "InstanceSpec", "SimBackend",
-    "needs_closed_form", "get_backend", "register_backend", "backend_names",
-    "BACKEND_ENV",
+    "EVENT_CAP", "BatchResult", "InstanceSpec", "LockstepRequest",
+    "SimBackend", "needs_closed_form", "get_backend", "register_backend",
+    "backend_names", "BACKEND_ENV",
 ]

@@ -64,6 +64,25 @@ class BatchResult:
     n_chunks: np.ndarray       # (B,) int
 
 
+@dataclass
+class LockstepRequest:
+    """One lane's loop instance inside a lockstep replay step.
+
+    Unlike :class:`InstanceSpec` (stateless seed tuples), a lockstep request
+    carries the lane's *live* numpy Generator: selector replays are
+    sequential across time steps, and every instance must consume the lane's
+    noise stream exactly where the historical per-cell loop would have — the
+    Python backend stays bit-identical to ``run_selector``'s sequential
+    replay, and the JAX backend draws its stateless fold seed from the same
+    stream position its ``run_instance`` path would.
+    """
+
+    profile_id: int
+    alg: int
+    chunk_param: int
+    rng: np.random.Generator
+
+
 class SimBackend(abc.ABC):
     """Protocol for pluggable simulation engines."""
 
@@ -79,6 +98,28 @@ class SimBackend(abc.ABC):
     def run_batch(self, profiles: Sequence, system,
                   specs: Sequence[InstanceSpec]) -> BatchResult:
         """Evaluate a batch of instances over a shared profile set."""
+
+    def run_lockstep(self, profiles: Sequence, system,
+                     requests: Sequence["LockstepRequest"]) -> BatchResult:
+        """Execute one lockstep replay step: every lane's loop instance for
+        the current time step, each drawing from its own lane rng.
+
+        Lane rng streams MUST be consumed in request order (lanes are
+        independent generators, so only the *within-lane* order is
+        observable).  This base implementation steps ``run_instance``
+        sequentially — bit-identical to the historical per-cell replay loop;
+        batched engines override it to fan the event-loop instances into one
+        device call while preserving each lane's stream position.
+        """
+        B = len(requests)
+        lt = np.zeros(B)
+        lib = np.zeros(B)
+        nc = np.zeros(B, np.int64)
+        for i, q in enumerate(requests):
+            r = self.run_instance(profiles[q.profile_id], system, q.alg,
+                                  q.chunk_param, q.rng)
+            lt[i], lib[i], nc[i] = r.loop_time, r.lib, r.n_chunks
+        return BatchResult(loop_time=lt, lib=lib, n_chunks=nc)
 
     @abc.abstractmethod
     def what_if_wave(self, prefix: np.ndarray, n_replicas: int,

@@ -43,8 +43,8 @@ from jax import lax
 
 from ...core.jaxsched import chunk_schedule, staticsteal_schedule
 from ..workloads import stack_prefix_grids
-from .base import (EVENT_CAP, BatchResult, InstanceSpec, SimBackend,
-                   needs_closed_form)
+from .base import (EVENT_CAP, BatchResult, InstanceSpec, LockstepRequest,
+                   SimBackend, needs_closed_form)
 from .python import InstanceResult, _h_eff, run_instance as _py_run_instance
 
 #: lax.while_loop buffer buckets for schedule length (powers of four keep
@@ -322,6 +322,44 @@ class JaxBatchedBackend(SimBackend):
                 for j, i in enumerate(sub):
                     mk[i], lb[i], fin[i] = m[j], l[j], f[j]
         return mk, lb, fin, counts
+
+    def run_lockstep(self, profiles: Sequence, system,
+                     requests: Sequence[LockstepRequest]) -> BatchResult:
+        """One lockstep replay step as a single batched device call.
+
+        Per request the lane rng is consumed exactly like the sequential
+        ``run_instance`` path would at the same stream position: STATIC and
+        over-cap SS/StaticSteal instances run the reference closed forms on
+        the lane rng directly, every event-loop instance draws one integer
+        as its stateless fold seed.  All event instances across all lanes
+        then execute as one ``_run_events`` batch — results are bit-identical
+        to sequential JAX replays because each lane's noise depends only on
+        its fold seed, never on batch order or size.
+        """
+        B = len(requests)
+        lt = np.zeros(B)
+        lib = np.zeros(B)
+        nc = np.zeros(B, np.int64)
+        event_ids: List[int] = []
+        specs: List[InstanceSpec] = []
+        for i, q in enumerate(requests):
+            profile = profiles[q.profile_id]
+            if q.alg == 0 or needs_closed_form(q.alg, profile.N,
+                                               q.chunk_param):
+                r = _py_run_instance(profile, system, q.alg, q.chunk_param,
+                                     q.rng)
+                lt[i], lib[i], nc[i] = r.loop_time, r.lib, r.n_chunks
+            else:
+                seed = (int(q.rng.integers(0, 2**31 - 1)),)
+                specs.append(InstanceSpec(profile_id=q.profile_id, alg=q.alg,
+                                          chunk_param=q.chunk_param,
+                                          seed=seed))
+                event_ids.append(i)
+        if specs:
+            mks, libs, _, counts = self._run_events(profiles, system, specs)
+            for j, i in enumerate(event_ids):
+                lt[i], lib[i], nc[i] = mks[j], libs[j], counts[j]
+        return BatchResult(loop_time=lt, lib=lib, n_chunks=nc)
 
     # ---- single instance (selector path) ----------------------------------
 

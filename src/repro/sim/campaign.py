@@ -5,6 +5,15 @@ selection methods} x {chunk parameter: default | expChunk} x {RL reward: LT |
 LIB}, computes the Oracle (per-loop, per-time-step best over all algorithm x
 chunk combinations) and the performance-degradation table of Fig. 5, the
 c.o.v. of Fig. 4, and the selection traces of Figs. 7-8.
+
+Two batched layers put the whole campaign on the active ``SimBackend``:
+
+* the fixed-algorithm portfolio sweep fans (alg x chunk-mode x rep x
+  time-step x loop) into ``run_batch`` (PR 2);
+* the selector replays — sequential across time steps by nature — run in
+  *lockstep across cells* through :class:`ReplayBatch`: a per-step
+  decide / execute / learn cycle where every lane's loop execution for step
+  ``t`` is one ``run_lockstep`` call per machine model.
 """
 
 from __future__ import annotations
@@ -12,7 +21,7 @@ from __future__ import annotations
 import math
 import zlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -22,9 +31,21 @@ def _digest(label: str) -> int:
     per process for strings, which made campaign noise irreproducible."""
     return zlib.crc32(label.encode("utf-8")) & 0xFFFF
 
+
+def _lane_digest(selector: str, reward: Optional[str]) -> int:
+    """Selector digest for a replay lane's rng seed tuple.
+
+    The reward objective is part of the lane identity: ``_digest(selector)``
+    alone made QLearn+LT and QLearn+LIB share one noise stream, which
+    batching surfaced as perfectly correlated lanes inside a lockstep step.
+    Reward-less selectors keep the bare-selector digest, so their historical
+    seed tuples (and Figs. 7-8 traces) are unchanged."""
+    return _digest(selector if reward is None else f"{selector}+{reward}")
+
 from ..core import (ALGORITHM_NAMES, N_ALGORITHMS, SelectionService,
                     coefficient_of_variation, exp_chunk)
-from .backends import InstanceSpec, get_backend
+from ..core.api import Observation
+from .backends import InstanceSpec, LockstepRequest, get_backend
 from .systems import SYSTEMS, SystemModel, get_system
 from .workloads import APPLICATIONS, Application, get_application
 
@@ -168,6 +189,10 @@ class SelectorRun:
     total: float
     #: per loop name: list of (chosen alg, loop_time, lib) per time-step
     history: Dict[str, List[Tuple[int, float, float]]]
+    #: the live service that produced the run (per-loop policies, Q-tables);
+    #: introspection only — equality and repr ignore it
+    service: Optional[SelectionService] = field(default=None, repr=False,
+                                                compare=False)
 
     def selection_shares(self, loop: Optional[str] = None) -> Dict[str, float]:
         """Fig. 7/8 pie charts: fraction of instances per selected algorithm."""
@@ -181,35 +206,50 @@ class SelectorRun:
                 for i in range(N_ALGORITHMS) if counts[i] > 0}
 
 
-def run_selector(app_name: str, system_name: str, selector: str,
-                 chunk_mode: str = "default", reward: Optional[str] = None,
-                 T: Optional[int] = None, seed: int = 0,
-                 sweep: Optional[PortfolioSweep] = None,
-                 backend=None) -> SelectorRun:
-    """Execute one selection method over the full time-stepped application.
+def _lane_service(app: Application, selector: str, reward: Optional[str],
+                  seed: int, sweep: Optional[PortfolioSweep]
+                  ) -> SelectionService:
+    """Per-lane service: one independent policy per modified loop (LB4OMP
+    loop ids).  Oracle lanes carry per-loop overrides with the per-step
+    best from the portfolio sweep."""
+    if selector.lower() == "oracle":
+        assert sweep is not None, "Oracle needs a portfolio sweep"
+        return SelectionService("Oracle", overrides={
+            nm: {"best_fn": sweep.oracle_best_fn(li)}
+            for li, nm in enumerate(app.loop_names)})
+    return SelectionService(selector, reward=reward, seed=seed)
 
-    Every modified loop gets an independent policy via ``SelectionService``
-    (LB4OMP loop ids); ``selector`` is any ``make_policy`` name, including
-    "Hybrid" (expert-seeded RL) and "Oracle" (per-loop overrides carrying
-    the per-step best; ``sweep`` is required for it).  The selection loop is
-    inherently sequential (each decision feeds on the previous instance's
-    telemetry), so ``backend`` here steers per-instance evaluation only —
-    the default Python engine is usually right."""
+
+def _lane_rng(app_name: str, system: SystemModel, selector: str,
+              chunk_mode: str, reward: Optional[str],
+              seed: int) -> np.random.Generator:
+    """The lane's noise stream, folded from the historical crc32 label
+    tuple (see ``_lane_digest`` for the reward term)."""
+    return np.random.default_rng((seed, _digest(app_name), system.P,
+                                  _lane_digest(selector, reward),
+                                  _digest(chunk_mode)))
+
+
+def run_selector_sequential(app_name: str, system_name: str, selector: str,
+                            chunk_mode: str = "default",
+                            reward: Optional[str] = None,
+                            T: Optional[int] = None, seed: int = 0,
+                            sweep: Optional[PortfolioSweep] = None,
+                            backend=None) -> SelectorRun:
+    """Reference replay: one cell, one instance at a time.
+
+    This is the historical ``run_selector`` loop, kept as the
+    bit-exactness oracle for the lockstep engine (``tests/test_replay.py``)
+    and as the baseline ``benchmarks/bench_replay.py`` measures against.
+    ``run_selector`` itself now routes through :class:`ReplayBatch` and must
+    reproduce this loop exactly on the Python backend."""
     bk = get_backend(backend)
     app = get_application(app_name)
     system = get_system(system_name)
     T = T or app.T
 
-    if selector.lower() == "oracle":
-        assert sweep is not None, "Oracle needs a portfolio sweep"
-        service = SelectionService("Oracle", overrides={
-            nm: {"best_fn": sweep.oracle_best_fn(li)}
-            for li, nm in enumerate(app.loop_names)})
-    else:
-        service = SelectionService(selector, reward=reward, seed=seed)
-
-    rng = np.random.default_rng((seed, _digest(app_name), system.P,
-                                 _digest(selector), _digest(chunk_mode)))
+    service = _lane_service(app, selector, reward, seed, sweep)
+    rng = _lane_rng(app_name, system, selector, chunk_mode, reward, seed)
     total = 0.0
     for t in range(T):
         for li, profile in enumerate(app.loops(t)):
@@ -226,7 +266,185 @@ def run_selector(app_name: str, system_name: str, selector: str,
     # the service's per-region records ARE the selection traces
     history = {nm: list(service.history(nm)) for nm in app.loop_names}
     return SelectorRun(selector=selector, chunk_mode=chunk_mode,
-                       reward=reward, total=total, history=history)
+                       reward=reward, total=total, history=history,
+                       service=service)
+
+
+# ---------------------------------------------------------------------------
+# lockstep multi-cell replay (the batched Fig. 5 engine)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CellSpec:
+    """One replay lane of the factorial campaign: which application on which
+    system, driven by which selection method."""
+
+    app: str
+    system: str
+    selector: str
+    chunk_mode: str = "default"
+    reward: Optional[str] = None
+
+    @property
+    def key(self) -> Tuple[str, str, Optional[str]]:
+        """The (selector, chunk_mode, reward) key Fig. 5 tables use."""
+        return (self.selector, self.chunk_mode, self.reward)
+
+
+class _Lane:
+    """Live state of one replay lane: its service (per-loop policies), its
+    private noise stream, and the running total."""
+
+    __slots__ = ("spec", "app", "system", "T", "service", "rng", "total")
+
+    def __init__(self, spec: CellSpec, app: Application, system: SystemModel,
+                 T: int, seed: int, sweep: Optional[PortfolioSweep]):
+        self.spec = spec
+        self.app = app
+        self.system = system
+        self.T = T
+        self.service = _lane_service(app, spec.selector, spec.reward, seed,
+                                     sweep)
+        self.rng = _lane_rng(spec.app, system, spec.selector,
+                             spec.chunk_mode, spec.reward, seed)
+        self.total = 0.0
+
+    def result(self) -> SelectorRun:
+        history = {nm: list(self.service.history(nm))
+                   for nm in self.app.loop_names}
+        return SelectorRun(selector=self.spec.selector,
+                           chunk_mode=self.spec.chunk_mode,
+                           reward=self.spec.reward, total=self.total,
+                           history=history, service=self.service)
+
+
+class _StepGroup:
+    """Per-system accumulator for one lockstep step: the shared profile
+    list (lanes on the same application share rows) plus the request and
+    pending-instance queues, in lane order."""
+
+    def __init__(self, system: SystemModel):
+        self.system = system
+        self.profiles: List = []
+        self._pids: Dict[str, List[int]] = {}
+        self.requests: List[LockstepRequest] = []
+        self.pending: List = []          # (lane, RegionInstance) per request
+
+    def register(self, app_name: str, loops) -> List[int]:
+        pids = self._pids.get(app_name)
+        if pids is None:
+            pids = list(range(len(self.profiles),
+                              len(self.profiles) + len(loops)))
+            self.profiles.extend(loops)
+            self._pids[app_name] = pids
+        return pids
+
+
+class ReplayBatch:
+    """Lockstep multi-cell selector replay.
+
+    Selector state is sequential across time steps, but loop execution is
+    parallel across cells — so the replay is organized as a per-step
+    decide / execute / learn cycle over many (app, system, selector,
+    chunk-mode, reward) lanes:
+
+    * **decide** — every lane's per-loop policy is consulted host-side
+      (``SelectionService.instance``; RL agents, fuzzy ladders and Oracle
+      overrides all run here);
+    * **execute** — all lanes' loop instances for step *t* fan into ONE
+      ``SimBackend.run_lockstep`` call per machine model (profiles of lanes
+      sharing an application are deduplicated), instead of hundreds of
+      sequential DES runs;
+    * **learn** — the batched results scatter back through
+      ``Observation.batch`` into each lane's policy feedback.
+
+    Lanes are fully independent: each owns its service and its private rng
+    stream (the historical crc32 label tuples), so on the Python backend a
+    lockstep replay is bit-identical to running ``run_selector_sequential``
+    per cell, and on the JAX backend it is identical to the sequential JAX
+    replay while being batched across every lane.
+    """
+
+    def __init__(self, lanes: Sequence[CellSpec], T: Optional[int] = None,
+                 seed: int = 0,
+                 sweeps: Optional[Dict[Tuple[str, str],
+                                       PortfolioSweep]] = None,
+                 backend=None):
+        self.bk = get_backend(backend)
+        sweeps = sweeps or {}
+        apps: Dict[str, Application] = {}
+        self.lanes: List[_Lane] = []
+        for spec in lanes:
+            app = apps.get(spec.app)
+            if app is None:
+                app = apps[spec.app] = get_application(spec.app)
+            self.lanes.append(_Lane(
+                spec, app, get_system(spec.system), T or app.T, seed,
+                sweeps.get((spec.app, spec.system))))
+        self._apps = apps
+        self.T_max = max((lane.T for lane in self.lanes), default=0)
+
+    def _loops(self, cache: Dict[str, List], app_name: str, t: int) -> List:
+        loops = cache.get(app_name)
+        if loops is None:
+            loops = cache[app_name] = self._apps[app_name].loops(t)
+        return loops
+
+    def step(self, t: int) -> None:
+        """One decide / execute / learn cycle over all active lanes."""
+        loops_cache: Dict[str, List] = {}
+        groups: Dict[str, _StepGroup] = {}
+        for lane in self.lanes:                               # decide
+            if t >= lane.T:
+                continue
+            g = groups.get(lane.spec.system)
+            if g is None:
+                g = groups[lane.spec.system] = _StepGroup(lane.system)
+            loops = self._loops(loops_cache, lane.spec.app, t)
+            pids = g.register(lane.spec.app, loops)
+            for li, profile in enumerate(loops):
+                inst = lane.service.instance(lane.app.loop_names[li])
+                d = inst.decision.with_instance_defaults(
+                    chunk_param_for(lane.spec.chunk_mode, profile.N,
+                                    lane.system.P))
+                g.requests.append(LockstepRequest(
+                    profile_id=pids[li], alg=d.action,
+                    chunk_param=d.chunk_param, rng=lane.rng))
+                g.pending.append((lane, inst))
+        for g in groups.values():                             # execute
+            res = self.bk.run_lockstep(g.profiles, g.system, g.requests)
+            obs = Observation.batch(res.loop_time, res.lib)
+            for (lane, inst), o in zip(g.pending, obs):       # learn
+                inst.report(observation=o)
+                inst.close()
+                lane.total += o.loop_time
+
+    def run(self) -> List[SelectorRun]:
+        """Replay every lane to completion; results in lane order."""
+        for t in range(self.T_max):
+            self.step(t)
+        return [lane.result() for lane in self.lanes]
+
+
+def run_selector(app_name: str, system_name: str, selector: str,
+                 chunk_mode: str = "default", reward: Optional[str] = None,
+                 T: Optional[int] = None, seed: int = 0,
+                 sweep: Optional[PortfolioSweep] = None,
+                 backend=None) -> SelectorRun:
+    """Execute one selection method over the full time-stepped application.
+
+    Every modified loop gets an independent policy via ``SelectionService``
+    (LB4OMP loop ids); ``selector`` is any ``make_policy`` name, including
+    "Hybrid" (expert-seeded RL) and "Oracle" (per-loop overrides carrying
+    the per-step best; ``sweep`` is required for it).  Runs as a one-lane
+    :class:`ReplayBatch` — bit-identical to the sequential reference loop
+    (``run_selector_sequential``); batch many cells through ``ReplayBatch``
+    or ``run_campaign`` to amortize the backend calls across lanes."""
+    spec = CellSpec(app=app_name, system=system_name, selector=selector,
+                    chunk_mode=chunk_mode, reward=reward)
+    sweeps = {(app_name, system_name): sweep} if sweep is not None else None
+    return ReplayBatch([spec], T=T, seed=seed, sweeps=sweeps,
+                       backend=backend).run()[0]
 
 
 # ---------------------------------------------------------------------------
@@ -257,26 +475,68 @@ class CampaignResult:
                 for k, r in self.selector_runs.items()}
 
 
+def run_campaign(cells: Sequence[Tuple[str, str]],
+                 T: Optional[int] = None, reps: int = 3, seed: int = 0,
+                 selectors=SELECTOR_GRID,
+                 chunk_modes=CHUNK_MODES,
+                 backend=None,
+                 selector_backend=None
+                 ) -> Dict[Tuple[str, str], CampaignResult]:
+    """The full factorial campaign over many Fig. 5 cells at once.
+
+    ``cells`` is a sequence of (application, system) name pairs.  Per cell
+    the fixed-algorithm portfolio sweeps to the Oracle through one
+    ``run_batch``; then EVERY cell's (selector x chunk-mode x reward) lanes
+    replay in lockstep through one :class:`ReplayBatch` — per time step the
+    campaign issues one batched backend call per machine model instead of
+    ``len(cells) * len(selectors) * len(chunk_modes)`` sequential DES runs.
+
+    ``backend`` drives the portfolio sweeps; ``selector_backend`` (default:
+    same as ``backend``) drives the lockstep replays — pass
+    ``selector_backend="python"`` when the adaptive algorithms must see
+    exact per-chunk telemetry rather than the JAX surrogates."""
+    if selector_backend is None:
+        selector_backend = backend
+    sweeps = {
+        (app, sysname): sweep_portfolio(app, sysname, T=T, reps=reps,
+                                        seed=seed, backend=backend)
+        for app, sysname in cells}
+    lanes = [CellSpec(app=app, system=sysname, selector=sel,
+                      chunk_mode=mode, reward=reward)
+             for app, sysname in cells
+             for mode in chunk_modes
+             for sel, reward in selectors]
+    runs = ReplayBatch(lanes, T=T, seed=seed, sweeps=sweeps,
+                       backend=selector_backend).run()
+    by_cell: Dict[Tuple[str, str], Dict] = {tuple(c): {} for c in cells}
+    for spec, run in zip(lanes, runs):
+        by_cell[(spec.app, spec.system)][spec.key] = run
+    out = {}
+    for app, sysname in cells:
+        sweep = sweeps[(app, sysname)]
+        T_eff = T or get_application(app).T
+        out[(app, sysname)] = CampaignResult(
+            app=app, system=sysname, sweep=sweep,
+            oracle_total=float(sweep.oracle_times()[:T_eff].sum()),
+            selector_runs=by_cell[(app, sysname)])
+    return out
+
+
 def run_campaign_cell(app_name: str, system_name: str,
                       T: Optional[int] = None, reps: int = 3,
                       seed: int = 0,
                       selectors=SELECTOR_GRID,
                       chunk_modes=CHUNK_MODES,
-                      backend=None) -> CampaignResult:
-    """One Fig. 5 cell.  ``backend`` picks the simulation engine for the
-    heavy portfolio sweep (``"jax"`` batches it); the sequential selector
-    replays stay on the reference engine for exact-telemetry adaptivity."""
-    sweep = sweep_portfolio(app_name, system_name, T=T, reps=reps, seed=seed,
-                            backend=backend)
-    T_eff = T or get_application(app_name).T
-    runs = {}
-    for mode in chunk_modes:
-        for sel, reward in selectors:
-            # pinned to the reference engine (not the env default): the
-            # adaptive algorithms need real per-chunk telemetry here
-            runs[(sel, mode, reward)] = run_selector(
-                app_name, system_name, sel, chunk_mode=mode, reward=reward,
-                T=T_eff, seed=seed, sweep=sweep, backend="python")
-    oracle_total = float(sweep.oracle_times()[:T_eff].sum())
-    return CampaignResult(app=app_name, system=system_name, sweep=sweep,
-                          oracle_total=oracle_total, selector_runs=runs)
+                      backend=None,
+                      selector_backend="python") -> CampaignResult:
+    """One Fig. 5 cell (a ``run_campaign`` of a single (app, system) pair).
+
+    ``backend`` picks the simulation engine for the heavy portfolio sweep
+    (``"jax"`` batches it); the selector replays default to the reference
+    engine for exact-telemetry adaptivity — pass
+    ``selector_backend="jax"`` to batch them too."""
+    return run_campaign([(app_name, system_name)], T=T, reps=reps, seed=seed,
+                        selectors=selectors, chunk_modes=chunk_modes,
+                        backend=backend,
+                        selector_backend=selector_backend)[
+                            (app_name, system_name)]

@@ -1,0 +1,288 @@
+"""Lockstep multi-cell replay: cross-backend equivalence, the golden Fig. 5
+regression table, campaign-statistic properties, and the lane seed-coupling
+regression.
+
+The equivalence contract (``ReplayBatch`` vs ``run_selector_sequential``):
+
+* Python backend — bit-exact.  Batching across cells must not change a
+  single bit of any lane's Q-tables, selection traces, or per-step times,
+  because each lane owns its rng stream and its per-loop policies.
+* JAX backend — identical to the *sequential JAX* replay (noise depends
+  only on per-instance fold seeds, never on batch composition), and in
+  agreement with the Python reference on well-separated selections.
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # also covers the `python tests/test_replay.py` golden-regen entry,
+    # which runs without pytest's test-dir sys.path insertion
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import ALGORITHM_NAMES
+from repro.sim import (CampaignResult, CellSpec, FixedRun, PortfolioSweep,
+                       ReplayBatch, SelectorRun, run_campaign,
+                       run_selector, run_selector_sequential)
+from repro.sim.campaign import _digest, _lane_digest
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "golden_fig5_t4.json")
+
+#: the T=4 equivalence grid: two cells on two different machine models in
+#: ONE batch (exercises the per-system lockstep grouping), every selector
+#: family, both chunk modes, and the reward axis.
+GRID = [CellSpec(app, system, sel, mode, reward)
+        for app, system in (("mandelbrot", "broadwell"), ("tc", "epyc"))
+        for mode in ("default", "expChunk")
+        for sel, reward in (("RandomSel", None), ("ExhaustiveSel", None),
+                            ("ExpertSel", None), ("QLearn", "LT"),
+                            ("QLearn", "LIB"), ("SARSA", "LIB"),
+                            ("Hybrid", "LT"))]
+
+
+def _policy_states(run: SelectorRun):
+    """Comparable per-loop policy state: Q-tables for RL policies (via
+    ``state_dict``), the ladder position for expert-phase policies."""
+    out = {}
+    for nm in run.history:
+        policy = run.service.policy(nm)
+        state = policy.state_dict()
+        if state is None:
+            # expert-phase policies: compare the fuzzy ladder position
+            expert = getattr(policy, "_expert", policy)
+            state = {"current": getattr(expert, "current", None)}
+        out[nm] = state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# lockstep vs sequential: Python backend, bit-exact
+# ---------------------------------------------------------------------------
+
+def test_lockstep_bitexact_on_python_backend():
+    runs = ReplayBatch(GRID, T=4, seed=0, backend="python").run()
+    for spec, run in zip(GRID, runs):
+        ref = run_selector_sequential(
+            spec.app, spec.system, spec.selector, chunk_mode=spec.chunk_mode,
+            reward=spec.reward, T=4, seed=0, backend="python")
+        # selection traces, per-step times and libs: tuple-for-tuple equal
+        assert run.history == ref.history, spec
+        assert run.total == ref.total, spec
+        # Q-tables (and expert ladder positions) bit-exact
+        assert _policy_states(run) == _policy_states(ref), spec
+
+
+def test_single_lane_run_selector_is_lockstep():
+    """``run_selector`` now routes through ``ReplayBatch``; a one-lane batch
+    must equal the sequential reference."""
+    r = run_selector("sphynx", "cascadelake", "ExhaustiveSel", T=6)
+    ref = run_selector_sequential("sphynx", "cascadelake", "ExhaustiveSel",
+                                  T=6)
+    assert r.history == ref.history
+    assert r.total == ref.total
+
+
+# ---------------------------------------------------------------------------
+# lockstep vs sequential: JAX backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_lockstep_jax_matches_sequential_jax():
+    """Noise depends only on per-instance fold seeds, so batching across
+    lanes must not perturb the JAX replay either."""
+    runs = ReplayBatch(GRID, T=4, seed=0, backend="jax").run()
+    for spec, run in zip(GRID, runs):
+        ref = run_selector_sequential(
+            spec.app, spec.system, spec.selector, chunk_mode=spec.chunk_mode,
+            reward=spec.reward, T=4, seed=0, backend="jax")
+        for nm in run.history:
+            assert [h[0] for h in run.history[nm]] == \
+                [h[0] for h in ref.history[nm]], (spec, nm)
+            t_batch = np.array([h[1] for h in run.history[nm]])
+            t_seq = np.array([h[1] for h in ref.history[nm]])
+            np.testing.assert_allclose(t_batch, t_seq, rtol=1e-6,
+                                       err_msg=str((spec, nm)))
+
+
+@pytest.mark.slow
+def test_lockstep_jax_agrees_with_python_on_separated_cell():
+    """TC/EPYC separates the portfolio by ~40 %: ExhaustiveSel's committed
+    argmax selection must not depend on the noise realization, so the JAX
+    lockstep replay and the Python reference elect the same algorithm."""
+    T = 16
+    lanes = [CellSpec("tc", "epyc", "ExhaustiveSel"),
+             CellSpec("tc", "epyc", "QLearn", reward="LT")]
+    runs = ReplayBatch(lanes, T=T, seed=0, backend="jax").run()
+    exhaustive, qlearn = runs
+
+    ref = run_selector_sequential("tc", "epyc", "ExhaustiveSel",
+                                  T=T, seed=0, backend="python")
+    # after the 12-instance search both backends commit to the same winner;
+    # compare the window before the (noise-sensitive) LIB-drift retrigger
+    # can fire (min_samples=3 monitored instances)
+    assert [h[0] for h in exhaustive.history["L0"][12:15]] == \
+        [h[0] for h in ref.history["L0"][12:15]]
+    t_jax = exhaustive.history["L0"][12][1]
+    t_py = ref.history["L0"][12][1]
+    assert abs(t_jax - t_py) / t_py < 0.25
+
+    # QLearn is still in its deterministic explore-first circuit at T=16:
+    # the action trace must be identical across backends
+    ref_q = run_selector_sequential("tc", "epyc", "QLearn", reward="LT",
+                                    T=T, seed=0, backend="python")
+    assert [h[0] for h in qlearn.history["L0"]] == \
+        [h[0] for h in ref_q.history["L0"]]
+
+
+# ---------------------------------------------------------------------------
+# lane seed coupling (regression): reward is part of the lane identity
+# ---------------------------------------------------------------------------
+
+def test_reward_is_part_of_lane_noise_stream():
+    # the digest separates reward lanes but leaves reward-less selectors on
+    # their historical streams (Figs. 7-8 traces unchanged)
+    assert _lane_digest("QLearn", "LT") != _lane_digest("QLearn", "LIB")
+    assert _lane_digest("RandomSel", None) == _digest("RandomSel")
+
+    r_lt = run_selector("hacc", "broadwell", "QLearn", reward="LT", T=3)
+    r_lib = run_selector("hacc", "broadwell", "QLearn", reward="LIB", T=3)
+    # explore-first visits the same actions in the same order ...
+    assert [h[0] for h in r_lt.history["L0"]] == \
+        [h[0] for h in r_lib.history["L0"]]
+    # ... but the two lanes must not share a noise realization
+    times_lt = [h[1] for h in r_lt.history["L0"]]
+    times_lib = [h[1] for h in r_lib.history["L0"]]
+    assert times_lt != times_lib
+
+
+# ---------------------------------------------------------------------------
+# golden Fig. 5 regression table
+# ---------------------------------------------------------------------------
+
+GOLDEN_CELLS = [("mandelbrot", "broadwell"), ("mandelbrot", "epyc"),
+                ("tc", "broadwell"), ("tc", "epyc")]
+
+
+def _key_str(key) -> str:
+    sel, mode, reward = key
+    return f"{sel}|{mode}|{reward or ''}"
+
+
+def compute_golden() -> dict:
+    """The golden campaign: two apps x two systems, T=4, reps=1, seed=0 on
+    the reference backend — small enough to recompute in CI, rich enough
+    that silent drift in ANY campaign statistic (sweep medians, oracle,
+    selector replays, degradation arithmetic) shows up."""
+    results = run_campaign(GOLDEN_CELLS, T=4, reps=1, seed=0,
+                           backend="python", selector_backend="python")
+    out = {}
+    for (app, system), cell in results.items():
+        out[f"{app}/{system}"] = {
+            "oracle_total": cell.oracle_total,
+            "cov": cell.sweep.cov(),
+            "degradation": {_key_str(k): v
+                            for k, v in cell.degradation().items()},
+            "totals": {_key_str(k): r.total
+                       for k, r in cell.selector_runs.items()},
+        }
+    return out
+
+
+@pytest.mark.slow
+def test_golden_fig5_table():
+    assert os.path.exists(GOLDEN_PATH), \
+        "golden table missing; regenerate with: python tests/test_replay.py"
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    fresh = compute_golden()
+    assert set(fresh) == set(golden)
+    for cell, want in golden.items():
+        got = fresh[cell]
+        assert got["oracle_total"] == pytest.approx(want["oracle_total"],
+                                                    rel=1e-9), cell
+        assert got["cov"] == pytest.approx(want["cov"], rel=1e-9), cell
+        assert set(got["degradation"]) == set(want["degradation"]), cell
+        for k, v in want["degradation"].items():
+            assert got["degradation"][k] == pytest.approx(v, rel=1e-9,
+                                                          abs=1e-9), (cell, k)
+        for k, v in want["totals"].items():
+            assert got["totals"][k] == pytest.approx(v, rel=1e-9), (cell, k)
+
+
+# ---------------------------------------------------------------------------
+# campaign-statistic properties (hypothesis / fallback shim)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 40), n_loops=st.integers(1, 3))
+def test_selection_shares_properties(seed, n_loops):
+    """Shares are a probability distribution, and restricting to one loop
+    is consistent with counting only that loop's instances."""
+    rng = np.random.default_rng(seed)
+    history = {}
+    for i in range(n_loops):
+        n = int(rng.integers(1, 40))
+        history[f"L{i}"] = [(int(rng.integers(0, len(ALGORITHM_NAMES))),
+                             float(rng.random()), float(rng.random() * 30))
+                            for _ in range(n)]
+    run = SelectorRun("QLearn", "default", "LT", 0.0, history)
+    assert sum(run.selection_shares().values()) == pytest.approx(1.0)
+    for nm, h in history.items():
+        shares = run.selection_shares(nm)
+        assert sum(shares.values()) == pytest.approx(1.0)
+        counts = {}
+        for a, _, _ in h:
+            counts[ALGORITHM_NAMES[a]] = counts.get(ALGORITHM_NAMES[a], 0) + 1
+        assert set(shares) == set(counts)
+        for name, frac in shares.items():
+            assert frac == pytest.approx(counts[name] / len(h))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 40), t_steps=st.integers(1, 6),
+       n_algs=st.integers(2, 6))
+def test_degradation_properties(seed, t_steps, n_algs):
+    """The Oracle lane degrades by exactly 0 %, and any selector that picks
+    per-instance from the sweep's portfolio degrades by >= 0 %."""
+    rng = np.random.default_rng(seed)
+    runs = {(a, "default"): FixedRun(
+        times=0.1 + rng.random((t_steps, 1)),
+        libs=np.zeros((t_steps, 1))) for a in range(n_algs)}
+    sweep = PortfolioSweep(app="x", system="y", runs=runs)
+    oracle_total = sweep.oracle_total()
+
+    keys = list(runs)
+    hist = []
+    for t in range(t_steps):
+        k = keys[int(rng.integers(0, n_algs))]
+        hist.append((k[0], float(runs[k].times[t, 0]), 0.0))
+    selector_runs = {
+        ("AnySel", "default", None): SelectorRun(
+            "AnySel", "default", None, sum(h[1] for h in hist),
+            {"L0": hist}),
+        ("Oracle", "default", None): SelectorRun(
+            "Oracle", "default", None, float(sweep.oracle_times().sum()),
+            {"L0": []}),
+    }
+    cell = CampaignResult(app="x", system="y", sweep=sweep,
+                          oracle_total=oracle_total,
+                          selector_runs=selector_runs)
+    deg = cell.degradation()
+    assert deg[("Oracle", "default", None)] == pytest.approx(0.0, abs=1e-9)
+    assert all(v >= -1e-9 for v in deg.values())
+
+
+if __name__ == "__main__":
+    # regenerate the golden table after an INTENDED statistics change
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(compute_golden(), f, indent=2, sort_keys=True)
+    print(f"wrote {GOLDEN_PATH}")
