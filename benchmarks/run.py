@@ -12,6 +12,7 @@ Benches:
     autotune     L2          step-plan selection on a real model
     roofline     §Roofline   three-term roofline per dry-run cell
     backends     §Backends   portfolio sweep: python vs batched JAX engine
+    event_kernel §Backends   while_loop vs fused Pallas event core
 """
 
 from __future__ import annotations
@@ -29,8 +30,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_anova, bench_autotune, bench_backends, bench_chunks,
-                   bench_cov, bench_degradation, bench_replay,
-                   bench_roofline, bench_serving, bench_traces)
+                   bench_cov, bench_degradation, bench_event_kernel,
+                   bench_replay, bench_roofline, bench_serving, bench_traces)
     benches = {
         "chunks": bench_chunks.main,
         "cov": bench_cov.main,
@@ -42,6 +43,7 @@ def main() -> None:
         "roofline": bench_roofline.main,
         "backends": bench_backends.main,
         "replay": bench_replay.main,
+        "event_kernel": bench_event_kernel.main,
     }
     if args.only:
         benches = {args.only: benches[args.only]}

@@ -1,0 +1,221 @@
+"""Fused OpenMP self-scheduling event loop — Pallas TPU kernel.
+
+The batched simulation backend's hot path is a sequential recurrence: for
+each dispatched chunk, assign it to the earliest-available PE (or to its
+pre-assigned owner for StaticSteal) and advance that PE's finish time.
+``lax.while_loop`` pays XLA per-iteration dispatch for every one of up to
+~1e5 chunks; this kernel runs the whole recurrence on-chip instead.
+
+Layout mirrors ``ssd_scan``: grid = (B, K // seg) with the chunk-segment
+axis innermost (sequential), so the per-PE finish times live in VMEM
+scratch and persist across segments — one kernel launch replaces K loop
+dispatches.  Segments past an instance's chunk count cost one guarded
+``fori_loop`` with zero trips.
+
+Two entry points share the assignment recurrence:
+
+* ``event_finish`` — minimal sequential core ``(eff_costs, forced, count)
+  -> finish``: effective per-chunk costs are precomputed outside (the
+  serving what-if path, whose costs come from an exact float64 host
+  prefix-gather).
+* ``event_finish_fused`` — full fusion for the campaign path: the
+  prefix-grid cost gather (linear interpolation over the profile's
+  cumulative-cost row) and the locality/noise application also run
+  on-chip per segment, so the (B, K) effective-cost array is never
+  materialized to HBM.
+
+Accuracy contract (``tests/test_event_kernel.py``): both entry points are
+**bit-identical in interpret mode** to the vmapped ``lax.while_loop``
+reference core in ``repro.sim.backends.jax_batched`` — per chunk the op
+sequence ``fin[pe] += h_eff + eff[i] * speed[pe] + bcost`` (argmin ties to
+the lowest PE index) is replicated exactly, and all random draws
+(jitter/speed/noise) stay in the shared data-parallel precompute so every
+core sees the same noise realization.  Like every kernel module here, the
+entry points take an explicit ``interpret`` flag; the platform policy
+(interpret on CPU, Mosaic-compiled on TPU) lives in ``kernels/ops.py``,
+which the simulation backend routes through.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: default chunk-segment length; divides every K bucket the backend pads to
+DEFAULT_SEG = 512
+
+
+def _assign_segment(eff, forced, speed, h_eff, bc, n, fin):
+    """Run ``n`` assignment steps of one segment (argmin / forced owner)."""
+
+    def body(i, fin):
+        pe = jnp.where(forced[i] >= 0, forced[i], jnp.argmin(fin))
+        return fin.at[pe].add(h_eff + eff[i] * speed[pe] + bc)
+
+    return lax.fori_loop(0, n, body, fin)
+
+
+def _loop_kernel(eff_ref, speed_ref, jit_ref, forced_ref, cnt_ref, sc_ref,
+                 out_ref, fin_scr, *, seg: int, n_seg: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        fin_scr[...] = jit_ref[...]
+
+    n = jnp.clip(cnt_ref[0, 0] - si * seg, 0, seg)
+
+    @pl.when(n > 0)     # segments past the chunk count touch nothing
+    def _run():
+        fin_scr[0] = _assign_segment(eff_ref[0], forced_ref[0], speed_ref[0],
+                                     sc_ref[0, 0], sc_ref[0, 1], n,
+                                     fin_scr[0])
+
+    @pl.when(si == n_seg - 1)
+    def _emit():
+        out_ref[...] = fin_scr[...]
+
+
+def _fused_kernel(gid_ref, row_ref, starts_ref, sizes_ref, loc_ref,
+                  noise_ref, speed_ref, jit_ref, forced_ref, cnt_ref, sc_ref,
+                  out_ref, fin_scr, *, seg: int, n_seg: int, G: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        fin_scr[...] = jit_ref[...]
+
+    n = jnp.clip(cnt_ref[0, 0] - si * seg, 0, seg)
+
+    @pl.when(n > 0)     # segments past the chunk count touch nothing
+    def _run():
+        # on-chip prefix-grid gather: costs of this segment's chunks via
+        # linear interpolation over the profile's cumulative-cost row —
+        # selected straight out of the deduplicated stack by the
+        # scalar-prefetched grid_id (no host-side (B, G+1) row gather)
+        row = row_ref[0]
+        gscale = sc_ref[0, 2]
+
+        def pref(x):
+            pos = x.astype(jnp.float32) * gscale
+            i = jnp.clip(pos.astype(jnp.int32), 0, G - 1)
+            lo = row[i]
+            return lo + (pos - i) * (row[i + 1] - lo)
+
+        starts = starts_ref[0]
+        costs = pref(starts + sizes_ref[0]) - pref(starts)
+        eff = costs * loc_ref[0] * noise_ref[0]
+        fin_scr[0] = _assign_segment(eff, forced_ref[0], speed_ref[0],
+                                     sc_ref[0, 0], sc_ref[0, 1], n,
+                                     fin_scr[0])
+
+    @pl.when(si == n_seg - 1)
+    def _emit():
+        out_ref[...] = fin_scr[...]
+
+
+def _seg_for(K: int, seg: int) -> int:
+    seg = min(seg, K)
+    if K % seg:
+        raise ValueError(f"segment {seg} must divide padded length {K}")
+    return seg
+
+
+def _lane_specs(seg, P):
+    """BlockSpecs shared by both kernels: per-lane (1, seg) chunk segments,
+    (1, P) PE rows, and SMEM scalar rows."""
+    chunk = pl.BlockSpec((1, seg), lambda bi, si: (bi, si))
+    lane = pl.BlockSpec((1, P), lambda bi, si: (bi, 0))
+    return chunk, lane
+
+
+@functools.partial(jax.jit, static_argnames=("seg", "interpret"))
+def event_finish(eff, speed, jitter, h_eff, bcost, forced, count, *,
+                 seg: int = DEFAULT_SEG, interpret: bool = False):
+    """Sequential assignment core over precomputed effective chunk costs.
+
+    eff (B, K) f32, speed/jitter (B, P) f32, h_eff/bcost (B,) f32,
+    forced (B, K) i32 (-1 = argmin assignment), count (B,) i32.
+    Returns finish (B, P) f32.
+    """
+    B, K = eff.shape
+    P = speed.shape[1]
+    seg = _seg_for(K, seg)
+    n_seg = K // seg
+    chunk, lane = _lane_specs(seg, P)
+    kernel = functools.partial(_loop_kernel, seg=seg, n_seg=n_seg)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_seg),
+        in_specs=[
+            chunk,                                              # eff
+            lane,                                               # speed
+            lane,                                               # jitter
+            chunk,                                              # forced
+            pl.BlockSpec((1, 1), lambda bi, si: (bi, 0),
+                         memory_space=pltpu.SMEM),              # count
+            pl.BlockSpec((1, 2), lambda bi, si: (bi, 0),
+                         memory_space=pltpu.SMEM),              # h_eff, bcost
+        ],
+        out_specs=lane,
+        out_shape=jax.ShapeDtypeStruct((B, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, P), jnp.float32)],
+        interpret=interpret,
+    )(eff, speed, jitter, forced, count.reshape(B, 1),
+      jnp.stack([h_eff, bcost], axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("seg", "interpret"))
+def event_finish_fused(grids, grid_id, gscale, starts, sizes, loc, noise,
+                       speed, jitter, h_eff, bcost, forced, count, *,
+                       seg: int = DEFAULT_SEG, interpret: bool = False):
+    """Fully fused campaign core: prefix-grid gather + locality/noise
+    application + assignment recurrence in one on-chip pass.
+
+    grids (S, G+1) f32 deduplicated cumulative-cost stack, grid_id (B,) i32
+    per-lane row index (scalar-prefetched: each lane's row streams straight
+    from the shared stack, never materializing a (B, G+1) gather), gscale
+    (B,) f32 (= G / N per lane), starts/sizes (B, K) i32, loc/noise (B, K)
+    f32; the rest as in :func:`event_finish`.  Returns finish (B, P) f32.
+    """
+    B, K = starts.shape
+    P = speed.shape[1]
+    G = grids.shape[1] - 1
+    seg = _seg_for(K, seg)
+    n_seg = K // seg
+    chunk = pl.BlockSpec((1, seg), lambda bi, si, gid_ref: (bi, si))
+    lane = pl.BlockSpec((1, P), lambda bi, si, gid_ref: (bi, 0))
+    kernel = functools.partial(_fused_kernel, seg=seg, n_seg=n_seg, G=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                                  # grid_id
+        grid=(B, n_seg),
+        in_specs=[
+            pl.BlockSpec((1, G + 1),
+                         lambda bi, si, gid_ref: (gid_ref[bi], 0)),  # row
+            chunk,                                              # starts
+            chunk,                                              # sizes
+            chunk,                                              # loc
+            chunk,                                              # noise
+            lane,                                               # speed
+            lane,                                               # jitter
+            chunk,                                              # forced
+            pl.BlockSpec((1, 1), lambda bi, si, gid_ref: (bi, 0),
+                         memory_space=pltpu.SMEM),              # count
+            pl.BlockSpec((1, 3), lambda bi, si, gid_ref: (bi, 0),
+                         memory_space=pltpu.SMEM),       # h_eff, bcost, gscale
+        ],
+        out_specs=lane,
+        scratch_shapes=[pltpu.VMEM((1, P), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, P), jnp.float32),
+        interpret=interpret,
+    )(grid_id, grids, starts, sizes, loc, noise, speed, jitter, forced,
+      count.reshape(B, 1), jnp.stack([h_eff, bcost, gscale], axis=1))

@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import jax
 
+from .event_loop import event_finish as _event_finish
+from .event_loop import event_finish_fused as _event_finish_fused
 from .flash_attention import flash_attention as _flash
 from .rmsnorm import rmsnorm as _rmsnorm
 from .ssd_scan import ssd_scan as _ssd
@@ -32,3 +34,17 @@ def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, head_block: int = 8):
 def rmsnorm(x, w, *, eps: float = 1e-5, block_rows: int = 256):
     return _rmsnorm(x, w, eps=eps, block_rows=block_rows,
                     interpret=_interpret())
+
+
+def event_finish(eff, speed, jitter, h_eff, bcost, forced, count, *,
+                 seg: int = 512):
+    return _event_finish(eff, speed, jitter, h_eff, bcost, forced, count,
+                         seg=seg, interpret=_interpret())
+
+
+def event_finish_fused(grids, grid_id, gscale, starts, sizes, loc, noise,
+                       speed, jitter, h_eff, bcost, forced, count, *,
+                       seg: int = 512):
+    return _event_finish_fused(grids, grid_id, gscale, starts, sizes, loc,
+                               noise, speed, jitter, h_eff, bcost, forced,
+                               count, seg=seg, interpret=_interpret())

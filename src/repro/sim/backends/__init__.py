@@ -3,12 +3,19 @@
 >>> from repro.sim.backends import get_backend
 >>> get_backend("python")      # reference event-loop engine
 >>> get_backend("jax")         # batched vmapped engine (campaign sweeps)
+>>> get_backend("jax-pallas")  # same engine, fused Pallas event core
 
 ``get_backend(None)`` resolves the default from the ``REPRO_SIM_BACKEND``
 environment variable (falling back to ``python``), so scripts and
 subprocess drivers can switch engines without threading a flag through
 every call site.  Backends are process-wide singletons — the JAX backend's
 schedule caches persist across sweeps.
+
+The JAX engine's sequential event core is itself pluggable
+(``REPRO_EVENT_CORE`` / ``JaxBatchedBackend(kernel=...)``): ``jax`` keeps
+the vmapped ``lax.while_loop`` reference, ``jax-pallas`` is the same
+backend constructed with the fused on-chip Pallas kernel
+(``repro.kernels.event_loop``).
 """
 
 from __future__ import annotations
@@ -60,8 +67,14 @@ def _make_jax() -> SimBackend:
     return JaxBatchedBackend()
 
 
+def _make_jax_pallas() -> SimBackend:
+    from .jax_batched import JaxBatchedBackend
+    return JaxBatchedBackend(kernel="pallas")
+
+
 register_backend("python", _make_python)
 register_backend("jax", _make_jax)
+register_backend("jax-pallas", _make_jax_pallas)
 
 __all__ = [
     "EVENT_CAP", "BatchResult", "InstanceSpec", "LockstepRequest",

@@ -9,31 +9,51 @@ rep x time-step) — at once:
     (non-adaptive algorithms exactly; AWF-*/mAF via their telemetry-free
     surrogate recurrences; StaticSteal via the quantum-serving replay that
     yields explicit (start, size, pe) triples) and cached by
-    (alg, N, P, chunk_param) — one schedule serves every rep and time-step.
-2.  Per-chunk costs come from ONE gathered linear interpolation over the
-    stacked prefix grids of all profiles in the batch.
-3.  The event loop itself is a ``lax.while_loop`` over per-PE finish times
-    (argmin assignment, exactly the reference heap policy: one entry per PE,
-    ties to the lowest index), ``vmap``-ed over the batch — all lanes step
-    together, so wall-clock is the *longest* schedule, not the sum.
+    (alg, N, P, chunk_param) — one schedule serves every rep and time-step
+    (LRU-bounded so long campaign processes stay flat).
+2.  Everything data-parallel runs in ONE vectorized precompute shared by
+    every event core: gathered linear interpolation over the stacked prefix
+    grids (device upload cached per profile stack), locality inflation, and
+    the counter-based jitter/speed/log-normal-noise draws.
+3.  The sequential event loop itself is a minimal pluggable core
+    ``(eff_costs, forced, count) -> finish`` with two interchangeable
+    implementations: the vmapped ``lax.while_loop`` reference (argmin
+    assignment, exactly the reference heap policy: one entry per PE, ties
+    to the lowest index) and the fused on-chip Pallas kernel
+    (``repro.kernels.event_loop``), selected via the ``kernel=``
+    constructor argument / the ``REPRO_EVENT_CORE`` env var.  The Pallas
+    core is bit-identical to the while-loop core in interpret mode
+    (``tests/test_event_kernel.py``) and additionally fuses the prefix
+    gather + locality/noise application on-chip for the campaign path.
+    ``run_batch``, ``run_lockstep`` and ``what_if_wave`` all route through
+    the selected core.
 
 STATIC and over-``EVENT_CAP`` SS/StaticSteal instances are delegated to the
 reference closed forms with the *same* numpy rng streams, so those results
 are bit-identical to the Python backend.  Event-loop instances draw their
 jitter/speed/noise from counter-based JAX streams folded statelessly from
-the campaign's crc32 seed tuples — reproducible across processes and batch
-orders, but a *different* (equally valid) noise realization than numpy.
+the campaign's crc32 seed tuples — reproducible across processes, batch
+orders and event cores, but a *different* (equally valid) noise realization
+than numpy.
 
 Accuracy contract (see tests/test_backends.py): noise-free, the chunk
 sequences and makespans match the Python backend exactly for the
 non-adaptive algorithms and StaticSteal on uniform loops; the adaptive
 family follows its constant-telemetry surrogate — faithful when per-chunk
-rates are homogeneous, approximate under strong noise/imbalance.
+rates are homogeneous, approximate under strong noise/imbalance.  Serving
+what-ifs gather their per-chunk request costs from the float64 host prefix
+(exact integer indexing) before the float32 device recurrence, so large
+request totals no longer lose precision against the float64 closed-form
+STATIC branch.
 """
 
 from __future__ import annotations
 
 import functools
+import hashlib
+import os
+import warnings
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -54,6 +74,10 @@ _K_BUCKETS = (256, 1024, 4096, 16384, 65536, 262144)
 #: max elements per (B, K) device array in one call (~16 MB float32)
 _MAX_ELEMS = 1 << 22
 
+#: env var naming the default sequential event core
+EVENT_CORE_ENV = "REPRO_EVENT_CORE"
+EVENT_CORES = ("while_loop", "pallas")
+
 
 def _next_bucket(n: int) -> int:
     for b in _K_BUCKETS:
@@ -69,39 +93,90 @@ def _pow2_rows(n: int) -> int:
     return b
 
 
+def _pallas_available() -> bool:
+    try:
+        from ...kernels import ops  # noqa: F401  (the routed kernel path)
+        return True
+    except Exception:       # pragma: no cover - exotic builds without pallas
+        return False
+
+
+def resolve_event_core(kernel: Optional[str] = None) -> str:
+    """Resolve the sequential event core: explicit ``kernel=`` argument,
+    else ``REPRO_EVENT_CORE``, else the while-loop reference.  Falls back
+    (with a warning) when Pallas is unavailable in this jax build."""
+    name = (kernel or os.environ.get(EVENT_CORE_ENV) or "while_loop").lower()
+    if name not in EVENT_CORES:
+        raise ValueError(f"unknown event core {name!r}; "
+                         f"available: {list(EVENT_CORES)}")
+    if name == "pallas" and not _pallas_available():
+        warnings.warn("Pallas unavailable; falling back to the "
+                      "while_loop event core", RuntimeWarning)
+        name = "while_loop"
+    return name
+
+
+class _LRU:
+    """Tiny LRU mapping bounding the process-wide caches (schedules, steal
+    replays, device-resident grid stacks) of the singleton backend."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self._d: OrderedDict = OrderedDict()
+
+    def get(self, key, default=None):
+        try:
+            self._d.move_to_end(key)
+            return self._d[key]
+        except KeyError:
+            return default
+
+    def put(self, key, value) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+
+def _profile_digest(p):
+    """Content key of one profile's device row, memoized on the profile.
+
+    Profiles are treated as immutable (the repo's ``Application`` classes
+    rebuild ``LoopProfile`` objects rather than mutating them) — the
+    expensive blake2b over a 64 KB grid runs once per object.  The cheap
+    fields (``N``, ``total``, the grid tail) ride along in the key as a
+    partial guard, but mutating ``prefix_grid`` in place after first use
+    is unsupported: rebuild the profile instead.
+    """
+    if p.prefix_grid is None:
+        return (p.N, p.total)
+    memo = getattr(p, "_grid_blake", None)
+    if memo is None or memo[0] is not p.prefix_grid:     # rebound array
+        memo = (p.prefix_grid, hashlib.blake2b(
+            np.ascontiguousarray(p.prefix_grid).tobytes(),
+            digest_size=16).digest())
+        try:
+            p._grid_blake = memo
+        except Exception:   # pragma: no cover - exotic read-only profiles
+            pass
+    # N/total/tail read live so they guard the cheap mutations too
+    return (p.N, p.total, float(p.prefix_grid[-1]), memo[1])
+
+
 # ---------------------------------------------------------------------------
 # jitted cores (module-level so the compile cache is shared across backends)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def _batched_events(P: int, grids, grid_id, inv_n, starts, sizes, loc,
-                    count, forced, seeds, h_eff, bcost,
-                    sigma, jitter_max, speed_spread):
-    """vmapped event loop: one lane per instance.
+def _core_while(eff, speed, jitter, h_eff, bcost, forced, count):
+    """Reference sequential core: vmapped ``lax.while_loop`` over per-PE
+    finish times — argmin assignment (ties to the lowest index), forced-PE
+    rows for StaticSteal.  The accuracy oracle every other core must match
+    bit-for-bit: ``fin[pe] += h_eff + eff[i] * speed[pe] + bcost``."""
 
-    grids (S, G+1) f32; per-lane arrays: grid_id (B,), inv_n (B,),
-    starts/sizes (B, K) i32, loc (B, K) f32, count (B,), forced (B, K) i32
-    (-1 = argmin assignment), seeds (B,) u32, h_eff/bcost (B,).
-    Returns (makespan (B,), lib (B,), finish (B, P)).
-    """
-    G = grids.shape[1] - 1
-
-    def one(gid, inv_n, starts, sizes, loc, cnt, forced, seed, h_eff, bc):
-        def pref(x):
-            pos = x.astype(jnp.float32) * (G * inv_n)
-            i = jnp.clip(pos.astype(jnp.int32), 0, G - 1)
-            lo = grids[gid, i]
-            return lo + (pos - i) * (grids[gid, i + 1] - lo)
-
-        costs = pref(starts + sizes) - pref(starts)
-        key = jax.random.PRNGKey(seed)
-        kj, ks, kn = jax.random.split(key, 3)
-        jitter = jax.random.uniform(kj, (P,)) * jitter_max
-        speed = jnp.clip(1.0 + speed_spread * jax.random.normal(ks, (P,)),
-                         0.8, 1.25)
-        noise = jnp.exp(sigma * jax.random.normal(kn, costs.shape))
-        eff = costs * loc * noise
-
+    def one(eff, speed, jitter, h_eff, bc, forced, cnt):
         def body(carry):
             i, fin = carry
             pe = jnp.where(forced[i] >= 0, forced[i], jnp.argmin(fin))
@@ -110,36 +185,99 @@ def _batched_events(P: int, grids, grid_id, inv_n, starts, sizes, loc,
 
         _, fin = lax.while_loop(lambda c: c[0] < cnt, body,
                                 (jnp.asarray(0, jnp.int32), jitter))
-        mk = fin.max()
-        lib = jnp.where(mk > 0.0, (1.0 - fin.mean() / mk) * 100.0, 0.0)
-        return mk, lib, fin
+        return fin
 
-    return jax.vmap(one, in_axes=(0,) * 10)(
-        grid_id, inv_n, starts, sizes, loc, count, forced, seeds,
-        h_eff, bcost)
+    return jax.vmap(one)(eff, speed, jitter, h_eff, bcost, forced, count)
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def _wave_eval(R: int, prefix, starts, sizes, count, forced, init_avail, h):
-    """Batched what-if: candidate schedules over one request-cost prefix.
+def _core_finish(core: str, eff, speed, jitter, h_eff, bcost, forced,
+                 count):
+    """Dispatch to the selected sequential core (``core`` is static).
 
-    prefix (N+1,), per-candidate starts/sizes/forced (A, K) i32 with exact
-    integer indexing (no interpolation), init_avail (R,) busy offsets.
+    The Pallas path goes through ``kernels.ops`` so the interpret-on-CPU /
+    Mosaic-on-TPU policy stays in one place."""
+    if core == "pallas":
+        from ...kernels.ops import event_finish
+        return event_finish(eff, speed, jitter, h_eff, bcost, forced, count)
+    return _core_while(eff, speed, jitter, h_eff, bcost, forced, count)
+
+
+def _batched_events_impl(P: int, core: str, grids, grid_id, inv_n, starts,
+                         sizes, loc, count, forced, seeds, h_eff, bcost,
+                         sigma, jitter_max, speed_spread):
+    """Batched event loop: shared data-parallel precompute + one sequential
+    core call.
+
+    grids (S, G+1) f32; per-lane arrays: grid_id (B,), inv_n (B,),
+    starts/sizes (B, K) i32, loc (B, K) f32, count (B,), forced (B, K) i32
+    (-1 = argmin assignment), seeds (B,) u32, h_eff/bcost (B,).
+    Returns (makespan (B,), lib (B,), finish (B, P)).
     """
-    def one(starts, sizes, cnt, forced):
-        costs = prefix[starts + sizes] - prefix[starts]
+    G = grids.shape[1] - 1
+    K = starts.shape[1]
 
-        def body(carry):
-            i, avail = carry
-            pe = jnp.where(forced[i] >= 0, forced[i], jnp.argmin(avail))
-            avail = avail.at[pe].add(h + costs[i])
-            return i + 1, avail
+    def draws(seed):
+        key = jax.random.PRNGKey(seed)
+        kj, ks, kn = jax.random.split(key, 3)
+        jitter = jax.random.uniform(kj, (P,)) * jitter_max
+        speed = jnp.clip(1.0 + speed_spread * jax.random.normal(ks, (P,)),
+                         0.8, 1.25)
+        noise = jnp.exp(sigma * jax.random.normal(kn, (K,)))
+        return jitter, speed, noise
 
-        _, avail = lax.while_loop(lambda c: c[0] < cnt, body,
-                                  (jnp.asarray(0, jnp.int32), init_avail))
-        return avail.max()
+    jitter, speed, noise = jax.vmap(draws)(seeds)
+    gscale = G * inv_n
 
-    return jax.vmap(one)(starts, sizes, count, forced)
+    if core == "pallas":
+        # full fusion: the prefix gather + locality/noise application run
+        # inside the kernel (rows scalar-prefetched per lane from the
+        # shared stack); eff never materializes to HBM
+        from ...kernels.ops import event_finish_fused
+        fin = event_finish_fused(grids, grid_id, gscale, starts, sizes, loc,
+                                 noise, speed, jitter, h_eff, bcost, forced,
+                                 count)
+    else:
+        def eff_one(gid, gs, starts, sizes, loc, noise):
+            def pref(x):
+                pos = x.astype(jnp.float32) * gs
+                i = jnp.clip(pos.astype(jnp.int32), 0, G - 1)
+                lo = grids[gid, i]
+                return lo + (pos - i) * (grids[gid, i + 1] - lo)
+
+            return (pref(starts + sizes) - pref(starts)) * loc * noise
+
+        eff = jax.vmap(eff_one)(grid_id, gscale, starts, sizes, loc, noise)
+        fin = _core_while(eff, speed, jitter, h_eff, bcost, forced, count)
+
+    mk = fin.max(axis=1)
+    lib = jnp.where(mk > 0.0, (1.0 - fin.mean(axis=1) / mk) * 100.0, 0.0)
+    return mk, lib, fin
+
+
+def _wave_eval_impl(R: int, core: str, eff, count, forced, init_avail, h):
+    """Batched what-if over precomputed per-chunk request costs.
+
+    eff (A, K) f32 — gathered host-side from the float64 cost prefix with
+    exact integer indexing, so no interpolation and no float32 prefix
+    cancellation; init_avail (R,) busy offsets shared by every candidate.
+    Runs the same sequential core as the campaign path (unit speeds, zero
+    jitter beyond the busy offsets)."""
+    A = eff.shape[0]
+    speed = jnp.ones((A, R), jnp.float32)
+    jitter = jnp.broadcast_to(init_avail.astype(jnp.float32), (A, R))
+    h_eff = jnp.full((A,), h, jnp.float32)
+    bc = jnp.zeros((A,), jnp.float32)
+    fin = _core_finish(core, eff, speed, jitter, h_eff, bc, forced, count)
+    return fin.max(axis=1)
+
+
+# donate_argnums was evaluated for both cores and rejected: donation only
+# pays when an output can alias a donated input, and every output here —
+# mk/lib (B,), finish (B, P), wave makespans (A,) — is orders of magnitude
+# smaller than the (B, K) schedule buffers, so donation would be a no-op
+# that warns per compiled shape on every platform.
+_batched_events = jax.jit(_batched_events_impl, static_argnums=(0, 1))
+_wave_eval = jax.jit(_wave_eval_impl, static_argnums=(0, 1))
 
 
 # ---------------------------------------------------------------------------
@@ -147,15 +285,25 @@ def _wave_eval(R: int, prefix, starts, sizes, count, forced, init_avail, h):
 # ---------------------------------------------------------------------------
 
 class JaxBatchedBackend(SimBackend):
-    """Campaign-scale batched engine (see module docstring)."""
+    """Campaign-scale batched engine (see module docstring).
+
+    ``kernel`` selects the sequential event core (``"while_loop"`` /
+    ``"pallas"``); ``None`` resolves ``REPRO_EVENT_CORE`` at construction
+    time (backends are process-wide singletons).
+    """
 
     name = "jax"
 
-    def __init__(self):
+    def __init__(self, kernel: Optional[str] = None):
+        self.event_core = resolve_event_core(kernel)
+        if self.event_core != "while_loop":
+            self.name = f"jax-{self.event_core}"
         # (alg, N, P, cp) -> sizes ndarray, for central-queue algorithms
-        self._sched_cache: Dict[Tuple, np.ndarray] = {}
+        self._sched_cache = _LRU(512)
         # StaticSteal replays keyed additionally by the cost/locality params
-        self._steal_cache: Dict[Tuple, Tuple] = {}
+        self._steal_cache = _LRU(128)
+        # profile-stack digest -> padded device-resident (Sp, G+1) grids
+        self._grids_cache = _LRU(4)
 
     # ---- schedule precompute ---------------------------------------------
 
@@ -178,7 +326,7 @@ class JaxBatchedBackend(SimBackend):
             raise RuntimeError(
                 f"schedule truncated: alg={alg} N={N} P={P} cp={cp}")
         if cache:
-            self._sched_cache[key] = sizes
+            self._sched_cache.put(key, sizes)
         return sizes
 
     def _steal_schedule(self, N: int, P: int, cp: int, profile, system,
@@ -210,7 +358,7 @@ class JaxBatchedBackend(SimBackend):
                np.asarray(pes, np.int32)[:count],
                np.asarray(own)[:count])
         if cache:
-            self._steal_cache[key] = out
+            self._steal_cache.put(key, out)
         return out
 
     def _event_rows(self, spec: InstanceSpec, profile, system):
@@ -230,6 +378,29 @@ class JaxBatchedBackend(SimBackend):
         starts = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int32)
         loc = (base_infl + amp * c_loc / (sizes + c_loc)).astype(np.float32)
         return starts, sizes.astype(np.int32), loc, None
+
+    def _grids_dev(self, profiles):
+        """Device-resident padded grid stack, cached by profile content.
+
+        The profile axis is padded to a power-of-two row bucket: a
+        different number of (t, loop) rows must not recompile the jitted
+        cores (padding rows are never gathered — grid_id only points at
+        real profiles).  Caching keys on per-profile content digests, so
+        lockstep replays that rebuild equal ``LoopProfile`` objects every
+        time step still hit the same upload.
+        """
+        key = tuple(_profile_digest(p) for p in profiles)
+        hit = self._grids_cache.get(key)
+        if hit is not None:
+            return hit
+        grids = stack_prefix_grids(profiles)
+        Sp = _pow2_rows(len(profiles))
+        if Sp > len(profiles):
+            grids = np.vstack([grids, np.zeros((Sp - len(profiles),
+                                                grids.shape[1]), np.float32)])
+        dev = jnp.asarray(grids)
+        self._grids_cache.put(key, dev)
+        return dev
 
     # ---- batch execution --------------------------------------------------
 
@@ -261,15 +432,7 @@ class JaxBatchedBackend(SimBackend):
         """Evaluate event-loop instances; returns (mk, lib, finish, count)
         arrays in spec order."""
         P = system.P
-        grids = stack_prefix_grids(profiles)
-        # pad the profile axis to a bucket: a different number of (t, loop)
-        # rows must not recompile _batched_events (padding rows are never
-        # gathered — grid_id only points at real profiles)
-        Sp = _pow2_rows(len(profiles))
-        if Sp > len(profiles):
-            grids = np.vstack([grids, np.zeros((Sp - len(profiles),
-                                                grids.shape[1]), np.float32)])
-        grids_dev = jnp.asarray(grids)
+        grids_dev = self._grids_dev(profiles)
         rows = [self._event_rows(s, profiles[s.profile_id], system)
                 for s in specs]
         counts = np.array([len(r[1]) for r in rows], np.int32)
@@ -278,6 +441,17 @@ class JaxBatchedBackend(SimBackend):
         lb = np.zeros(B)
         fin = np.zeros((B, P))
 
+        # per-spec scalar lanes (gathered per bucket below)
+        gid_all = np.fromiter((s.profile_id for s in specs), np.int32, B)
+        inv_all = np.fromiter((1.0 / profiles[s.profile_id].N
+                               for s in specs), np.float32, B)
+        seed_all = np.fromiter((s.fold_seed() for s in specs), np.uint32, B)
+        h_all = np.fromiter((_h_eff(system, s.alg) for s in specs),
+                            np.float32, B)
+        bc_all = np.fromiter(
+            (profiles[s.profile_id].memory_bound * system.boundary_cost
+             for s in specs), np.float32, B)
+
         by_bucket: Dict[int, List[int]] = {}
         for i, c in enumerate(counts):
             by_bucket.setdefault(_next_bucket(int(c)), []).append(i)
@@ -285,42 +459,46 @@ class JaxBatchedBackend(SimBackend):
         for K, ids in sorted(by_bucket.items()):
             max_rows = max(8, _MAX_ELEMS // K)
             for off in range(0, len(ids), max_rows):
-                sub = ids[off:off + max_rows]
-                Bp = _pow2_rows(len(sub))
+                sub = np.asarray(ids[off:off + max_rows])
+                n = len(sub)
+                Bp = _pow2_rows(n)
+                # ragged-to-padded assembly: one boolean scatter per field
+                # instead of the old per-row element-wise packing loop
+                lens = counts[sub]
+                mask = np.arange(K, dtype=np.int32)[None, :] < lens[:, None]
                 starts = np.zeros((Bp, K), np.int32)
                 sizes = np.zeros((Bp, K), np.int32)
                 loc = np.zeros((Bp, K), np.float32)
                 forced = np.full((Bp, K), -1, np.int32)
+                starts[:n][mask] = np.concatenate([rows[i][0] for i in sub])
+                sizes[:n][mask] = np.concatenate([rows[i][1] for i in sub])
+                loc[:n][mask] = np.concatenate([rows[i][2] for i in sub])
+                forced[:n][mask] = np.concatenate(
+                    [rows[i][3] if rows[i][3] is not None
+                     else np.full(lens[j], -1, np.int32)
+                     for j, i in enumerate(sub)])
                 gid = np.zeros(Bp, np.int32)
                 inv_n = np.ones(Bp, np.float32)
                 cnt = np.zeros(Bp, np.int32)
                 seeds = np.zeros(Bp, np.uint32)
                 h_eff = np.zeros(Bp, np.float32)
                 bcost = np.zeros(Bp, np.float32)
-                for j, i in enumerate(sub):
-                    s = specs[i]
-                    profile = profiles[s.profile_id]
-                    st, sz, lc, pes = rows[i]
-                    n = len(sz)
-                    starts[j, :n], sizes[j, :n], loc[j, :n] = st, sz, lc
-                    if pes is not None:
-                        forced[j, :n] = pes
-                    gid[j] = s.profile_id
-                    inv_n[j] = 1.0 / profile.N
-                    cnt[j] = n
-                    seeds[j] = s.fold_seed()
-                    h_eff[j] = _h_eff(system, s.alg)
-                    bcost[j] = profile.memory_bound * system.boundary_cost
+                gid[:n] = gid_all[sub]
+                inv_n[:n] = inv_all[sub]
+                cnt[:n] = lens
+                seeds[:n] = seed_all[sub]
+                h_eff[:n] = h_all[sub]
+                bcost[:n] = bc_all[sub]
                 m, l, f = _batched_events(
-                    P, grids_dev, jnp.asarray(gid), jnp.asarray(inv_n),
-                    jnp.asarray(starts), jnp.asarray(sizes),
-                    jnp.asarray(loc), jnp.asarray(cnt), jnp.asarray(forced),
-                    jnp.asarray(seeds), jnp.asarray(h_eff),
-                    jnp.asarray(bcost), np.float32(system.noise_sigma),
+                    P, self.event_core, grids_dev, jnp.asarray(gid),
+                    jnp.asarray(inv_n), jnp.asarray(starts),
+                    jnp.asarray(sizes), jnp.asarray(loc), jnp.asarray(cnt),
+                    jnp.asarray(forced), jnp.asarray(seeds),
+                    jnp.asarray(h_eff), jnp.asarray(bcost),
+                    np.float32(system.noise_sigma),
                     np.float32(system.jitter), np.float32(system.speed_spread))
                 m, l, f = np.asarray(m), np.asarray(l), np.asarray(f)
-                for j, i in enumerate(sub):
-                    mk[i], lb[i], fin[i] = m[j], l[j], f[j]
+                mk[sub], lb[sub], fin[sub] = m[:n], l[:n], f[:n]
         return mk, lb, fin, counts
 
     def run_lockstep(self, profiles: Sequence, system,
@@ -390,7 +568,9 @@ class JaxBatchedBackend(SimBackend):
         N = len(prefix) - 1
         R = n_replicas
         out = np.zeros(len(algs))
-        batched: List[Tuple[int, np.ndarray, np.ndarray, Optional[np.ndarray]]] = []
+        prefix = np.asarray(prefix, dtype=np.float64)
+        batched: List[Tuple[int, np.ndarray, np.ndarray,
+                            Optional[np.ndarray]]] = []
         for k, alg in enumerate(algs):
             if alg == 0 and chunk_param <= 0:
                 bounds = np.linspace(0, N, R + 1).round().astype(int)
@@ -407,35 +587,32 @@ class JaxBatchedBackend(SimBackend):
                 st, sz, pes, _ = self._steal_schedule(
                     N, R, chunk_param, _UniformStub(N, unit), _NoLocStub(),
                     cache=False)
-                batched.append((k, st, sz, pes))
+                batched.append((k, st.astype(np.int64), sz, pes))
             else:
                 sz = self._central_schedule(alg, N, R, chunk_param,
                                             cache=False)
                 st = np.concatenate([[0], np.cumsum(sz)[:-1]])
-                batched.append((k, st.astype(np.int32),
-                                sz.astype(np.int32), None))
+                batched.append((k, st, sz.astype(np.int32), None))
         if batched:
-            # pad every dynamic shape to a power-of-two bucket: wave sizes
-            # drift per dispatch, and an online what-if must not recompile
-            # _wave_eval each call.  Padded prefix tail / schedule slots are
-            # never read (starts+sizes <= N, the loop stops at cnt).
+            # per-chunk costs gathered from the float64 prefix host-side
+            # (exact integer indexing): the float32 rounding then happens on
+            # the small per-chunk values, not on the large cumulative totals.
+            # Schedule slots are padded to a power-of-two bucket so online
+            # what-ifs with drifting wave sizes never recompile _wave_eval.
             K = _pow2_rows(max(len(b[2]) for b in batched))
-            Np = _pow2_rows(len(prefix))
             A = len(batched)
-            prefix_p = np.zeros(Np, np.float32)
-            prefix_p[: len(prefix)] = prefix
-            starts = np.zeros((A, K), np.int32)
-            sizes = np.zeros((A, K), np.int32)
+            eff = np.zeros((A, K), np.float32)
             forced = np.full((A, K), -1, np.int32)
             cnt = np.zeros(A, np.int32)
             for j, (_, st, sz, pes) in enumerate(batched):
                 n = len(sz)
-                starts[j, :n], sizes[j, :n], cnt[j] = st, sz, n
+                eff[j, :n] = prefix[st + sz] - prefix[st]
+                cnt[j] = n
                 if pes is not None:
                     forced[j, :n] = pes
             mks = np.asarray(_wave_eval(
-                R, jnp.asarray(prefix_p), jnp.asarray(starts),
-                jnp.asarray(sizes), jnp.asarray(cnt), jnp.asarray(forced),
+                R, self.event_core, jnp.asarray(eff), jnp.asarray(cnt),
+                jnp.asarray(forced),
                 jnp.asarray(np.asarray(init_avail), jnp.float32),
                 np.float32(h + fixed)))
             for j, (k, *_rest) in enumerate(batched):

@@ -247,6 +247,64 @@ def test_what_if_wave_backends_agree():
     np.testing.assert_allclose(st.makespan, wp[2], rtol=1e-9)
 
 
+def test_what_if_wave_float64_prefix_precision():
+    """Regression for the float32 downcast of the request-cost prefix: the
+    JAX backend now gathers per-chunk costs from the float64 prefix host-side
+    (exact integer indexing), so large request totals stay within float32
+    rounding of the float64 reference loop.  The old device-side f32-prefix
+    subtraction lost ~3e-6 relative on this 16k-request wave — two orders of
+    magnitude outside this tolerance."""
+    rng = np.random.default_rng(0)
+    prefix = np.concatenate([[0.0], np.cumsum(rng.random(16384) * 1e-2)])
+    avail = rng.random(16) * 1e-3
+    algs = [1, 2, 3, 6]                  # exact (non-adaptive) candidates
+    wp = get_backend("python").what_if_wave(prefix, 16, avail, 2e-4, 1e-3,
+                                            algs, chunk_param=4)
+    wj = get_backend("jax").what_if_wave(prefix, 16, avail, 2e-4, 1e-3,
+                                         algs, chunk_param=4)
+    np.testing.assert_allclose(wj, wp, rtol=5e-7)
+
+
+def test_schedule_caches_are_lru_bounded():
+    """Long campaign processes must not grow the schedule caches without
+    bound — the LRU evicts the least-recently-used entry."""
+    from repro.sim.backends.jax_batched import JaxBatchedBackend, _LRU
+
+    lru = _LRU(maxsize=2)
+    lru.put("a", 1)
+    lru.put("b", 2)
+    assert lru.get("a") == 1             # refreshes "a"
+    lru.put("c", 3)                      # evicts "b"
+    assert lru.get("b") is None
+    assert lru.get("a") == 1 and lru.get("c") == 3
+
+    bk = JaxBatchedBackend()
+    bk._sched_cache = _LRU(maxsize=4)
+    for n in range(1000, 1006):
+        bk._central_schedule(2, n, 8, 0)
+    assert len(bk._sched_cache) <= 4
+    assert get_backend("jax")._sched_cache.maxsize > 0
+    assert get_backend("jax")._steal_cache.maxsize > 0
+
+
+def test_grids_device_upload_cached_per_profile_stack():
+    """Equal-content profile stacks (even rebuilt objects, as lockstep
+    replays do every time step) hit the same device-resident upload."""
+    from repro.sim import get_application
+
+    bk = get_backend("jax")
+    mk = lambda: LoopProfile(name="u", N=1024, memory_bound=0.0,
+                             locality_sens=0.0, c_loc=64, unit=2**-20)
+    assert bk._grids_dev([mk()]) is bk._grids_dev([mk()])
+    # gridded profiles are rebuilt per loops(t) call yet digest equal
+    app = get_application("mandelbrot")
+    d1 = bk._grids_dev(app.loops(0))
+    d2 = bk._grids_dev(app.loops(0))
+    assert d1 is d2
+    # different content -> different upload
+    assert bk._grids_dev([mk()]) is not d1
+
+
 def test_continuous_batcher_queue_is_deque():
     from collections import deque
 
