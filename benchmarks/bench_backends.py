@@ -57,23 +57,37 @@ def run(T: int = 16, reps: int = 3, pairs=PAIRS) -> dict:
 
 def smoke() -> None:
     """CI gate: tiny-T cov on both backends + Oracle agreement on the
-    well-separated TC/EPYC cell (40 % winner margin)."""
+    well-separated TC/EPYC cell (40 % winner margin).  Writes the smoke
+    record to ``results/bench_backends.json`` so the tier-1 job has an
+    artifact to upload even without the full shoot-out."""
     from benchmarks.bench_cov import run as cov_run
     from repro.sim import sweep_portfolio
 
+    record = {"mode": "smoke", "cov": {}}
     rows_py = cov_run(T=2, reps=1, backend="python")
     rows_jax = cov_run(T=2, reps=1, backend="jax")
+    drift = []
     for (a, s, cp), (_, _, cj) in zip(rows_py, rows_jax):
-        assert np.isfinite(cp) and np.isfinite(cj), (a, s)
+        record["cov"][f"{a}/{s}"] = {"python": round(cp, 5),
+                                     "jax": round(cj, 5)}
         # c.o.v. spans orders of magnitude across cells; backends must
         # land in the same regime
-        assert abs(np.log10(max(cj, 1e-9) / max(cp, 1e-9))) < 0.35, \
-            (a, s, cp, cj)
+        if not (np.isfinite(cp) and np.isfinite(cj)) or \
+                abs(np.log10(max(cj, 1e-9) / max(cp, 1e-9))) >= 0.35:
+            drift.append((a, s, cp, cj))
         print(f"smoke cov {a}/{s}: python={cp:.3f} jax={cj:.3f}")
     sp = sweep_portfolio("tc", "epyc", T=4, reps=1, backend="python")
     sj = sweep_portfolio("tc", "epyc", T=4, reps=1, backend="jax")
-    assert (sp.oracle_argmin() == sj.oracle_argmin()).all(), \
-        "backends disagree on the TC/EPYC Oracle"
+    agree = bool((sp.oracle_argmin() == sj.oracle_argmin()).all())
+    record["tc_epyc_oracle_argmin_agree"] = agree
+    record["cov_drift"] = [list(map(str, d)) for d in drift]
+    # the record must exist even when a gate below fails: it is the
+    # artifact CI uploads with if: always() for triage
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "bench_backends.json"), "w") as f:
+        json.dump(record, f, indent=2)
+    assert not drift, f"python/jax cov drift: {drift}"
+    assert agree, "backends disagree on the TC/EPYC Oracle"
     print("smoke: backends agree on the TC/EPYC T=4 Oracle")
 
 

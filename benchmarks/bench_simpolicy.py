@@ -1,0 +1,142 @@
+"""Simulation-assisted selection benchmark: regret-vs-Oracle and decision
+latency for SimPolicy / SimHybrid against the paper's selection methods on
+Fig. 5 cells.
+
+Regret is the Fig. 5 degradation ((T_method - T_oracle) / T_oracle); the
+latency microbench measures ``decide()`` wall-clock — SimPolicy pays one
+batched candidate-pricing call (amortized by the what-if cache on repeated
+contexts) where the learned methods pay a table lookup.
+
+``--smoke`` is the CI regret gate on the tiny-T tc/epyc cell: SimPolicy
+must beat RandomSel and stay within ``SMOKE_REGRET_PCT`` of the Oracle.
+Everything is recorded to ``results/bench_simpolicy.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results")
+
+PAIRS = (("tc", "epyc"), ("mandelbrot", "broadwell"))
+
+SELECTORS = [("RandomSel", None), ("ExpertSel", None), ("QLearn", "LT"),
+             ("Hybrid", "LT"), ("SimPolicy", "LT"), ("SimHybrid", "LT")]
+
+#: smoke gate: max tolerated SimPolicy regret vs Oracle on the tiny-T cell
+#: (measured ~0 %; the margin absorbs single-rep noise on the Oracle side)
+SMOKE_REGRET_PCT = 15.0
+
+
+def _tag(sel, reward):
+    return f"{sel}+{reward}" if reward else sel
+
+
+def run(T: int = 40, reps: int = 2, pairs=PAIRS) -> dict:
+    from repro.sim import run_campaign
+
+    res = run_campaign(list(pairs), T=T, reps=reps, selectors=SELECTORS,
+                       chunk_modes=("default",))
+    out = {}
+    for (app, sysname), cell in res.items():
+        deg = cell.degradation()
+        out[f"{app}/{sysname}"] = {
+            "T": T, "reps": reps,
+            "oracle_total_s": round(cell.oracle_total, 6),
+            "regret_pct": {
+                _tag(sel, reward): round(deg[(sel, "default", reward)], 2)
+                for sel, reward in SELECTORS},
+        }
+    return out
+
+
+def decision_latency(n: int = 200) -> dict:
+    """us per ``decide()``: learned/expert methods vs SimPolicy (cold = the
+    batched pricing call; warm = what-if cache hit on a repeated context)."""
+    from repro.core import SimPolicy, make_policy
+    from repro.sim import LoopWhatIf, get_application, get_system
+
+    profile = get_application("tc").loops(0)[0]
+    system = get_system("epyc")
+    out = {}
+    for name in ("QLearn", "ExpertSel", "Hybrid"):
+        policy = make_policy(name, reward="LT") if name != "ExpertSel" \
+            else make_policy(name)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            policy.decide()
+        out[name] = round((time.perf_counter() - t0) / n * 1e6, 2)
+
+    whatif = LoopWhatIf(system)
+    whatif.set_context(profile, 0)
+    policy = SimPolicy(whatif, reward="LT")
+    t0 = time.perf_counter()
+    policy.decide()
+    out["SimPolicy_cold"] = round((time.perf_counter() - t0) * 1e6, 2)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        policy.decide()
+    out["SimPolicy_warm"] = round((time.perf_counter() - t0) / n * 1e6, 2)
+    return out
+
+
+def smoke() -> None:
+    """CI regret gate (tiny-T tc/epyc, single rep): SimPolicy must beat
+    RandomSel and stay within SMOKE_REGRET_PCT of the Oracle."""
+    from repro.sim import run_campaign
+
+    res = run_campaign([("tc", "epyc")], T=6, reps=1,
+                       selectors=[("RandomSel", None), ("SimPolicy", "LT")],
+                       chunk_modes=("default",))
+    deg = res[("tc", "epyc")].degradation()
+    sim = deg[("SimPolicy", "default", "LT")]
+    rnd = deg[("RandomSel", "default", None)]
+    print(f"smoke simpolicy tc/epyc T=6: regret sim={sim:.2f}% "
+          f"random={rnd:.2f}%")
+    assert sim < rnd, \
+        f"SimPolicy regret {sim:.2f}% did not beat RandomSel {rnd:.2f}%"
+    assert sim <= SMOKE_REGRET_PCT, \
+        f"SimPolicy regret {sim:.2f}% above the {SMOKE_REGRET_PCT}% gate"
+
+
+def main() -> list:
+    os.makedirs(OUT, exist_ok=True)
+    res = run()
+    res["decision_latency_us"] = decision_latency()
+    with open(os.path.join(OUT, "bench_simpolicy.json"), "w") as f:
+        json.dump(res, f, indent=2)
+    rows = []
+    for pair, r in res.items():
+        if pair == "decision_latency_us":
+            continue
+        reg = r["regret_pct"]
+        rows.append((f"simpolicy_{pair.replace('/', '_')}", 0.0,
+                     f"regret_sim={reg['SimPolicy+LT']}%,"
+                     f"hybrid={reg['Hybrid+LT']}%,"
+                     f"qlearn={reg['QLearn+LT']}%"))
+    lat = res["decision_latency_us"]
+    rows.append(("simpolicy_decide_warm", lat["SimPolicy_warm"],
+                 f"cold={lat['SimPolicy_cold']}us,"
+                 f"qlearn={lat['QLearn']}us"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    # allow `python benchmarks/bench_simpolicy.py` from the repo root
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for row in main():
+            print(f"{row[0]},{row[1]:.3f},{row[2]}")

@@ -2,6 +2,7 @@
 benches.  Prints ``name,us_per_call,derived`` CSV lines.
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--full]
+    PYTHONPATH=src python -m benchmarks.run --smoke [--tier tier1|slow|all]
 
 Benches:
     chunks       Fig. 1 & 2  chunk-size progressions
@@ -12,14 +13,78 @@ Benches:
     autotune     L2          step-plan selection on a real model
     roofline     §Roofline   three-term roofline per dry-run cell
     backends     §Backends   portfolio sweep: python vs batched JAX engine
+    replay       §Backends   lockstep multi-cell replay vs sequential
     event_kernel §Backends   while_loop vs fused Pallas event core
+    simpolicy    §SimAS      simulation-assisted selection regret + latency
+
+``--smoke`` is the single CI entry point: it runs every registered smoke
+gate for the requested tier and ALWAYS writes ``results/smoke_summary.json``
+(per-gate status, duration, error) before exiting non-zero on any failure —
+the summary is the triage artifact CI uploads with ``if: always()``.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+import traceback
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+#: every CI smoke gate: name -> (module, tier).  tier1 gates are fast drift
+#: checks run next to the unit tests; slow gates ride the campaign-scale job.
+SMOKE_GATES = {
+    "backends": ("bench_backends", "tier1"),
+    "simpolicy": ("bench_simpolicy", "tier1"),
+    "replay": ("bench_replay", "slow"),
+    "event_kernel": ("bench_event_kernel", "slow"),
+}
+
+
+def run_smoke(tier: str) -> int:
+    """Run every registered smoke gate for ``tier`` ("all" runs everything);
+    ``results/smoke_summary.json`` is rewritten after EVERY gate so a
+    killed process (OOM, job timeout) still leaves the partial record the
+    ``if: always()`` artifact upload exists for.  Returns the number of
+    failed gates."""
+    import importlib
+
+    summary = {"tier": tier, "gates": {}}
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "smoke_summary.json")
+
+    def flush_summary():
+        with open(path, "w") as f:
+            json.dump(summary, f, indent=2)
+
+    failures = 0
+    for name, (module, gate_tier) in SMOKE_GATES.items():
+        rec = {"tier": gate_tier}
+        if tier not in ("all", gate_tier):
+            rec["status"] = "skipped"
+            summary["gates"][name] = rec
+            flush_summary()
+            continue
+        rec["status"] = "running"       # visible if this gate kills the job
+        summary["gates"][name] = rec
+        flush_summary()
+        t0 = time.perf_counter()
+        try:
+            importlib.import_module(f"benchmarks.{module}").smoke()
+            rec["status"] = "ok"
+        except Exception as e:
+            failures += 1
+            rec["status"] = "failed"
+            rec["error"] = f"{type(e).__name__}: {e}"
+            rec["traceback"] = traceback.format_exc(limit=8)
+        rec["seconds"] = round(time.perf_counter() - t0, 3)
+        flush_summary()
+        print(f"smoke gate {name}: {rec['status']} "
+              f"({rec['seconds']}s)", flush=True)
+    return failures
 
 
 def main() -> None:
@@ -27,11 +92,20 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--full", action="store_true",
                     help="full-fidelity Fig. 5 campaign (hours)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the registered CI smoke gates and write "
+                         "results/smoke_summary.json")
+    ap.add_argument("--tier", default="all", choices=["tier1", "slow", "all"],
+                    help="which smoke gates to run (with --smoke)")
     args = ap.parse_args()
+
+    if args.smoke:
+        sys.exit(1 if run_smoke(args.tier) else 0)
 
     from . import (bench_anova, bench_autotune, bench_backends, bench_chunks,
                    bench_cov, bench_degradation, bench_event_kernel,
-                   bench_replay, bench_roofline, bench_serving, bench_traces)
+                   bench_replay, bench_roofline, bench_serving,
+                   bench_simpolicy, bench_traces)
     benches = {
         "chunks": bench_chunks.main,
         "cov": bench_cov.main,
@@ -44,6 +118,7 @@ def main() -> None:
         "backends": bench_backends.main,
         "replay": bench_replay.main,
         "event_kernel": bench_event_kernel.main,
+        "simpolicy": bench_simpolicy.main,
     }
     if args.only:
         benches = {args.only: benches[args.only]}

@@ -8,11 +8,21 @@ All requested cells run through ONE ``run_campaign`` call: the portfolio
 sweeps batch per cell, and every cell's selector lanes replay in lockstep
 (``--selector-backend jax`` batches the replays too; the default keeps them
 on the reference engine for exact per-chunk telemetry).
+
+``--selectors sim`` (or setting ``REPRO_SIM_POLICY``) adds the
+simulation-assisted lanes — SimPolicy (candidate pricing in a noise-free
+simulator, zero live exploration) and SimHybrid (RL over the simulator's
+top-k) — priced on ``--sim-backend``.
 """
 
 import argparse
 
-from repro.sim import APPLICATIONS, SYSTEMS, run_campaign
+from repro.core import resolve_sim_policy
+from repro.sim import (APPLICATIONS, EXTENDED_SELECTOR_GRID, SELECTOR_GRID,
+                       SIM_SELECTOR_GRID, SYSTEMS, run_campaign)
+
+GRIDS = {"paper": SELECTOR_GRID, "extended": EXTENDED_SELECTOR_GRID,
+         "sim": SIM_SELECTOR_GRID}
 
 
 def main():
@@ -27,7 +37,18 @@ def main():
     ap.add_argument("--selector-backend", default="python",
                     help="backend for the lockstep selector replays "
                          "(python = exact telemetry; jax = batched lanes)")
+    ap.add_argument("--selectors", default=None,
+                    choices=sorted(GRIDS),
+                    help="selector grid: paper | extended (+Hybrid) | sim "
+                         "(+SimPolicy/SimHybrid); default: sim when "
+                         "REPRO_SIM_POLICY is set, else paper")
+    ap.add_argument("--sim-backend", default=None,
+                    help="backend pricing the sim-assisted candidate sets "
+                         "(default: --selector-backend)")
     args = ap.parse_args()
+    if args.selectors is None:
+        # resolve_sim_policy validates the env spelling (a typo raises)
+        args.selectors = "sim" if resolve_sim_policy() else "paper"
 
     apps = (list(APPLICATIONS) if args.apps == "all"
             else args.apps.split(","))
@@ -37,7 +58,9 @@ def main():
 
     results = run_campaign(cells, T=args.T, reps=args.reps,
                            backend=args.backend,
-                           selector_backend=args.selector_backend)
+                           selector_backend=args.selector_backend,
+                           selectors=GRIDS[args.selectors],
+                           sim_backend=args.sim_backend)
     for (app, system), cell in results.items():
         print(f"\n=== {app} on {system} ===   "
               f"Oracle={cell.oracle_total:.2f}s  "

@@ -20,6 +20,9 @@ from .selectors import (FixedPolicy, OraclePolicy, RandomPolicy,
                         Selector, FixedSel, OracleSel, RandomSel,
                         ExhaustiveSel, ExpertSel, QLearnSel, SarsaSel,
                         make_selector, SELECTOR_NAMES)
+from .simpolicy import (Candidate, SimAssistedHybrid, SimPolicy,
+                        SimUnavailable, SIM_POLICY_ENV, SIM_POLICY_NAMES,
+                        is_sim_policy, resolve_sim_policy)
 from .service import RegionInstance, SelectionService
 from .persistence import (AgentStatsLogger, save_agent, load_agent,
                           save_policy_state, load_policy_state,
@@ -37,6 +40,10 @@ __all__ = [
     "RandomPolicy", "ExhaustivePolicy", "ExpertPolicy", "RLPolicy",
     "QLearnPolicy", "SarsaPolicy", "HybridPolicy", "make_policy",
     "POLICY_NAMES", "RegionInstance", "SelectionService",
+    # simulation-assisted selection (SimAS-style)
+    "Candidate", "SimPolicy", "SimAssistedHybrid", "SimUnavailable",
+    "SIM_POLICY_ENV", "SIM_POLICY_NAMES", "is_sim_policy",
+    "resolve_sim_policy",
     # agents + persistence
     "QLearnAgent", "SarsaAgent", "explore_first_sequence",
     "AgentStatsLogger", "save_agent", "load_agent", "save_policy_state",

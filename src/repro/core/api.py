@@ -243,6 +243,8 @@ def _reward_lt_lib(obs: Observation) -> float:
 
 def make_policy(name: str, **kw) -> SelectionPolicy:
     """Build a policy by name: Fixed, RandomSel, ExhaustiveSel, ExpertSel,
-    QLearn, SARSA, Hybrid, Oracle.  See ``selectors.make_policy``."""
+    QLearn, SARSA, Hybrid, Oracle, plus the simulation-assisted SimPolicy /
+    SimHybrid (which require a ``simulator=`` candidate pricer; see
+    ``repro.core.simpolicy``).  See ``selectors.make_policy``."""
     from .selectors import make_policy as _impl
     return _impl(name, **kw)

@@ -37,8 +37,9 @@ from .rewards import REWARD_POSITIVE
 
 SELECTOR_NAMES = ["Fixed", "RandomSel", "ExhaustiveSel", "ExpertSel",
                   "QLearn", "SARSA", "Hybrid", "Oracle"]
-#: the structured-API spelling of the same registry
-POLICY_NAMES = list(SELECTOR_NAMES)
+#: the structured-API spelling of the same registry (plus the
+#: simulation-assisted methods, which need a ``simulator=``)
+POLICY_NAMES = SELECTOR_NAMES + ["SimPolicy", "SimHybrid"]
 
 
 # ---------------------------------------------------------------------------
@@ -463,6 +464,27 @@ def make_policy(name: str, **kw) -> SelectionPolicy:
                             **_reward_kw(kw))
     if name in ("oracle",):
         return OraclePolicy(kw["best_fn"])
+    # simulation-assisted methods (SimAS-style; repro.core.simpolicy) —
+    # imported lazily, simpolicy imports the policies defined above; the
+    # alias table lives there so is_sim_policy() and this factory agree
+    from .simpolicy import _SIM_ALIASES, SimAssistedHybrid, SimPolicy
+    canon = _SIM_ALIASES.get(name)
+    if canon is not None:
+        if "simulator" not in kw:
+            raise ValueError(
+                f"policy {name!r} needs a simulator= candidate pricer "
+                f"(LoopWhatIf / WaveWhatIf / PlanWhatIf)")
+        if canon == "SimPolicy":
+            return SimPolicy(kw["simulator"],
+                             **_pick(kw, "candidates",
+                                     "confidence_threshold", "n_actions"),
+                             **_reward_kw(kw))
+        return SimAssistedHybrid(kw["simulator"],
+                                 **_pick(kw, "top_k", "agent", "expert_steps",
+                                         "window", "alpha", "gamma",
+                                         "alpha_decay", "decay_mode",
+                                         "n_actions"),
+                                 **_reward_kw(kw))
     raise ValueError(f"unknown selection policy {name!r}")
 
 

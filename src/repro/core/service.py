@@ -41,6 +41,7 @@ from typing import Dict, Hashable, List, Optional, Tuple
 from .api import Decision, Observation, SelectionPolicy, make_policy
 from .persistence import (load_policy_state, save_policy_state,
                           system_fingerprint)
+from .simpolicy import resolve_sim_policy
 
 
 def _stable_region_seed(seed: int, region: Hashable) -> int:
@@ -148,13 +149,16 @@ class RegionInstance:
 class SelectionService:
     """Multiplexes independent selection policies over region ids."""
 
-    def __init__(self, method: str = "QLearn",
+    def __init__(self, method: Optional[str] = None,
                  reward: Optional[str] = None,
                  store_dir: Optional[str] = None,
                  system: Optional[str] = None,
                  overrides: Optional[Dict[Hashable, Dict]] = None,
                  **policy_kw):
-        self._method = method
+        # no explicit method: honour the REPRO_SIM_POLICY env override (a
+        # simulation-assisted default needs a ``simulator=`` in policy_kw)
+        self._method = method if method is not None \
+            else resolve_sim_policy("QLearn")
         self._kw = dict(policy_kw)
         if reward is not None:
             self._kw["reward"] = reward

@@ -1,6 +1,6 @@
 from .sharding import (param_specs, batch_specs, cache_specs, opt_specs,
                        named, data_axes, fit_spec)
-from .autotune import (ExecutionPlan, DEFAULT_PLANS, StepAutoTuner,
-                       make_plan_builder)
+from .autotune import (ExecutionPlan, DEFAULT_PLANS, PlanWhatIf,
+                       StepAutoTuner, make_plan_builder)
 from .compression import EFCompressor, compression_ratio
 from .ctx import activation_sharding, constrain_boundary

@@ -22,12 +22,15 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
-from ..core import SelectionService, percent_load_imbalance
+from ..core import (SelectionService, is_sim_policy, percent_load_imbalance,
+                    resolve_sim_policy)
+from ..core.api import Observation
+from ..core.simpolicy import Candidate
 from ..configs.base import ModelConfig
 from ..optim.adamw import AdamWConfig
 
@@ -51,25 +54,101 @@ DEFAULT_PLANS: Tuple[ExecutionPlan, ...] = (
 )
 
 
+class PlanWhatIf:
+    """Calibrated analytic cost model over an execution-plan portfolio — the
+    autotuner's candidate simulator (SimAS-style).
+
+    The *prior* prices a plan in relative units from its structure: remat
+    recomputes the forward pass (~30 % extra FLOPs), every extra microbatch
+    pays a launch/pipeline overhead, gradient compression pays an
+    encode/decode term.  Every measured step then *calibrates* the model:
+    per-plan EMAs override the prior where a plan has been observed, and the
+    global seconds-per-unit scale (fit from all observed plans) converts the
+    prior of never-executed plans into seconds.  A retuning epoch therefore
+    re-prices the whole portfolio from ONE measured plan — candidates are
+    evaluated in simulation, not on live steps.
+
+    Predictions carry step time only (no per-worker load vector), so
+    sim-assisted tuning should run under the default "LT" reward; a "LIB"
+    reward would see zero predicted spread and fall back to the expert
+    ladder on every step."""
+
+    REMAT_MULT = 1.30
+    MB_OVERHEAD = 0.03
+    COMPRESS_MULT = {None: 0.0, "int8": 0.05, "topk": 0.08}
+    EMA = 0.3           # per-plan measurement smoothing
+
+    def __init__(self, plans: Sequence[ExecutionPlan]):
+        self.plans = list(plans)
+        self._measured: Dict[int, float] = {}   # plan index -> EMA seconds
+        self._scale: Optional[float] = None     # seconds per prior unit
+
+    def prior(self, plan: ExecutionPlan) -> float:
+        """Relative cost of one step under ``plan`` (unitless)."""
+        mult = self.REMAT_MULT if plan.remat else 1.0
+        mult *= 1.0 + self.MB_OVERHEAD * (plan.microbatches - 1)
+        mult *= 1.0 + self.COMPRESS_MULT.get(plan.compress, 0.05)
+        return mult
+
+    def observe(self, idx: int, step_time: float) -> None:
+        """Fold one measured step into the calibration."""
+        prev = self._measured.get(idx)
+        self._measured[idx] = step_time if prev is None else \
+            (1.0 - self.EMA) * prev + self.EMA * step_time
+        scales = [t / self.prior(self.plans[i])
+                  for i, t in self._measured.items()]
+        self._scale = float(np.median(scales))
+
+    def candidates(self) -> List[Candidate]:
+        return [Candidate(i) for i in range(len(self.plans))]
+
+    def price(self, cands: Sequence[Candidate]) -> List[Observation]:
+        scale = self._scale if self._scale is not None else 1.0
+        out = []
+        for c in cands:
+            t = self._measured.get(c.alg)
+            if t is None:
+                t = scale * self.prior(self.plans[c.alg])
+            out.append(Observation(loop_time=float(t)))
+        return out
+
+
 class StepAutoTuner:
     """Online selection over compiled step variants.
 
     build_fn(plan) -> step callable (already jitted or jit-able); the tuner
     compiles on first use and charges compile time to the exploration phase
-    only in wall-clock terms (recorded separately)."""
+    only in wall-clock terms (recorded separately).
+
+    With ``method="SimPolicy"`` (or ``REPRO_SIM_POLICY`` set and no explicit
+    method) the retuning epochs run in simulation: a :class:`PlanWhatIf`
+    prices the whole portfolio before every step, only the predicted winner
+    is compiled and executed, and each measured step recalibrates the model
+    — the explore-first phase never burns live steps on losing plans."""
 
     def __init__(self, plans: List[ExecutionPlan], build_fn,
-                 method: str = "ExhaustiveSel", reward: str = "LT",
+                 method: Optional[str] = None, reward: str = "LT",
                  seed: int = 0, region: str = "train_step",
-                 store_dir: Optional[str] = None):
+                 store_dir: Optional[str] = None,
+                 sim_model: Optional[PlanWhatIf] = None):
         self.plans = list(plans)
         self.build_fn = build_fn
         self.region = region
+        method = method or resolve_sim_policy("ExhaustiveSel")
+        self.sim_model = None
+        policy_kw = {}
+        if is_sim_policy(method):
+            self.sim_model = sim_model or PlanWhatIf(self.plans)
+            policy_kw["simulator"] = self.sim_model
+        elif sim_model is not None:
+            raise ValueError(
+                f"sim_model= given but method {method!r} never consults a "
+                f"simulator; use method='SimPolicy' or 'SimHybrid'")
         # any make_policy name works (incl. "Hybrid"); with store_dir the
         # learned plan table warm-starts across runs (paper §5)
         self.service = SelectionService(method, reward=reward, seed=seed,
                                         n_actions=len(self.plans),
-                                        store_dir=store_dir)
+                                        store_dir=store_dir, **policy_kw)
         self._compiled: Dict[int, Callable] = {}
         self.compile_times: Dict[int, float] = {}
         self.history: List[Tuple[str, float, float]] = []
@@ -93,6 +172,8 @@ class StepAutoTuner:
             dt = time.perf_counter() - t0
             lib = self._lib_signal(out)
             inst.report(loop_time=dt, lib=lib)
+        if self.sim_model is not None:  # recalibrate the plan cost model
+            self.sim_model.observe(idx, dt)
         self.history.append((self.plans[idx].name, dt, lib))
         return out, self.plans[idx].name, dt
 

@@ -1,2 +1,2 @@
 from .engine import (DispatchSimulator, ContinuousBatcher, ReplicaCostModel,
-                     WaveStats)
+                     WaveStats, WaveWhatIf)

@@ -26,9 +26,12 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core import (N_ALGORITHMS, SelectionService, make_portfolio,
-                    percent_load_imbalance)
+from ..core import (N_ALGORITHMS, SelectionService, exp_chunk, is_sim_policy,
+                    make_portfolio, percent_load_imbalance,
+                    resolve_sim_policy)
+from ..core.api import Observation
 from ..core.portfolio import make_algorithm
+from ..core.simpolicy import Candidate, SimUnavailable
 from ..data.pipeline import Request
 from ..sim.backends import get_backend
 
@@ -58,10 +61,57 @@ class ReplicaCostModel:
                 + self.per_request * len(tokens))
 
 
+class WaveWhatIf:
+    """Candidate simulator over ``DispatchSimulator.what_if`` — the serving
+    side of simulation-assisted selection.  ``run_wave`` binds the pending
+    request queue before consulting the policy; ``price`` fans the candidate
+    set (algorithm x chunk variant) into batched what-if calls against the
+    *current* replica busy-state.
+
+    Predictions carry the wave makespan ONLY (``what_if_wave`` returns no
+    per-replica finishes), so every reward ranks candidates by predicted LT:
+    "LT+LIB"/"p95"/"throughput" reduce to their loop-time fallbacks, and a
+    pure "LIB" reward sees zero spread everywhere — SimPolicy then takes its
+    expert fallback on every wave.  Use reward="LT" with sim-assisted
+    dispatch."""
+
+    def __init__(self, sim: "DispatchSimulator"):
+        self._sim = sim
+        self._requests: Optional[List[Request]] = None
+
+    def set_requests(self, requests: List[Request]) -> None:
+        self._requests = requests
+
+    def candidates(self) -> List[Candidate]:
+        if self._requests is None:
+            raise SimUnavailable("WaveWhatIf has no pending wave bound")
+        out = [Candidate(a) for a in range(N_ALGORITHMS)]
+        ec = exp_chunk(len(self._requests), self._sim.R)
+        if ec != self._sim.chunk_param:
+            out += [Candidate(a, ec) for a in range(N_ALGORITHMS)]
+        return out
+
+    def price(self, cands: Sequence[Candidate]) -> List[Observation]:
+        if self._requests is None:
+            raise SimUnavailable("WaveWhatIf has no pending wave bound")
+        # one batched what_if per distinct chunk parameter
+        groups: Dict[Optional[int], List[int]] = {}
+        for i, c in enumerate(cands):
+            groups.setdefault(c.chunk_param, []).append(i)
+        out: List[Optional[Observation]] = [None] * len(cands)
+        for cp, idxs in groups.items():
+            mk = self._sim.what_if(self._requests,
+                                   algs=[cands[i].alg for i in idxs],
+                                   chunk_param=cp)
+            for i, m in zip(idxs, mk):
+                out[i] = Observation(loop_time=float(m))
+        return out
+
+
 class DispatchSimulator:
     """Chunk-self-scheduled request dispatch over R replica groups."""
 
-    def __init__(self, n_replicas: int, selector: str = "QLearn",
+    def __init__(self, n_replicas: int, selector: Optional[str] = None,
                  reward: str = "LT", chunk_param: int = 0, seed: int = 0,
                  cost_model: Optional[ReplicaCostModel] = None,
                  dispatch_overhead: float = 0.2e-3,
@@ -74,8 +124,22 @@ class DispatchSimulator:
         #: simulation backend for ``what_if`` queries ("jax" evaluates the
         #: whole candidate set in one batched call)
         self.backend = backend
+        # no explicit selector: REPRO_SIM_POLICY can flip the dispatcher to
+        # simulation-assisted selection from the environment
+        selector = selector or resolve_sim_policy("QLearn")
         kw = dict(selector_kw or {})
         kw.setdefault("seed", seed)
+        # SimPolicy / SimHybrid consult this simulator's own what_if before
+        # every wave (SimAS-style): zero exploration on live dispatches.
+        # A caller-supplied wave pricer (anything with ``set_requests``) is
+        # bound the same way, so it sees every pending queue too.
+        self._whatif = None
+        if is_sim_policy(selector):
+            sim = kw.get("simulator")
+            if sim is None:
+                sim = kw["simulator"] = WaveWhatIf(self)
+            if hasattr(sim, "set_requests"):
+                self._whatif = sim
         # any make_policy name works here, incl. "Hybrid"; the reward may be
         # a serving-centric registry entry ("p95", "throughput", "LT+LIB")
         self.service = SelectionService(selector, reward=reward, **kw)
@@ -93,21 +157,27 @@ class DispatchSimulator:
                 + self.cost.per_request * np.arange(len(tokens) + 1))
 
     def what_if(self, requests: List[Request],
-                algs: Optional[Sequence[int]] = None) -> np.ndarray:
+                algs: Optional[Sequence[int]] = None,
+                chunk_param: Optional[int] = None) -> np.ndarray:
         """Batched what-if: predicted wave makespan for each candidate
         scheduling algorithm over the *current* replica busy-state, without
         dispatching anything (the SimAS-style consultation a policy can use
-        to rank its candidate set before committing)."""
+        to rank its candidate set before committing).  ``chunk_param``
+        prices a chunk-parameter variant (default: the dispatcher's own)."""
         algs = list(algs) if algs is not None else list(range(N_ALGORITHMS))
+        if chunk_param is None:
+            chunk_param = self.chunk_param
         free = self._replica_free - self._replica_free.min()
         return get_backend(self.backend).what_if_wave(
             self._wave_prefix(requests), self.R, free, self.h,
-            self.cost.fixed, algs, chunk_param=self.chunk_param)
+            self.cost.fixed, algs, chunk_param=chunk_param)
 
     def run_wave(self, requests: List[Request], wave_id: int = 0
                  ) -> WaveStats:
         """One loop instance: dispatch all pending requests with the selected
         scheduling algorithm; replicas self-assign request-chunks."""
+        if self._whatif is not None:    # bind the wave the decision is about
+            self._whatif.set_requests(requests)
         inst = self.service.instance("dispatch")
         with inst:
             d = inst.decision.with_instance_defaults(self.chunk_param)

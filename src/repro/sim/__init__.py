@@ -12,12 +12,13 @@ from .engine import InstanceResult, run_instance
 from .backends import (EVENT_CAP, BatchResult, InstanceSpec, LockstepRequest,
                        SimBackend, backend_names, get_backend,
                        register_backend)
+from .whatif import LoopWhatIf, noise_free
 from .campaign import (CampaignResult, CellSpec, FixedRun, PortfolioSweep,
                        ReplayBatch, SelectorRun, run_campaign,
                        run_campaign_cell, run_fixed, run_selector,
                        run_selector_sequential, sweep_portfolio,
                        chunk_param_for, CHUNK_MODES, SELECTOR_GRID,
-                       EXTENDED_SELECTOR_GRID)
+                       EXTENDED_SELECTOR_GRID, SIM_SELECTOR_GRID)
 
 __all__ = [
     "SYSTEMS", "SystemModel", "get_system", "APPLICATIONS", "Application",
@@ -31,5 +32,6 @@ __all__ = [
     "run_campaign", "run_campaign_cell", "run_fixed", "run_selector",
     "run_selector_sequential", "sweep_portfolio",
     "chunk_param_for", "CHUNK_MODES", "SELECTOR_GRID",
-    "EXTENDED_SELECTOR_GRID",
+    "EXTENDED_SELECTOR_GRID", "SIM_SELECTOR_GRID",
+    "LoopWhatIf", "noise_free",
 ]

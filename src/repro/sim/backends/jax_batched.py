@@ -50,7 +50,6 @@ STATIC branch.
 from __future__ import annotations
 
 import functools
-import hashlib
 import os
 import warnings
 from collections import OrderedDict
@@ -62,6 +61,7 @@ import numpy as np
 from jax import lax
 
 from ...core.jaxsched import chunk_schedule, staticsteal_schedule
+from ..workloads import profile_digest as _profile_digest
 from ..workloads import stack_prefix_grids
 from .base import (EVENT_CAP, BatchResult, InstanceSpec, LockstepRequest,
                    SimBackend, needs_closed_form)
@@ -139,31 +139,6 @@ class _LRU:
 
     def __len__(self) -> int:
         return len(self._d)
-
-
-def _profile_digest(p):
-    """Content key of one profile's device row, memoized on the profile.
-
-    Profiles are treated as immutable (the repo's ``Application`` classes
-    rebuild ``LoopProfile`` objects rather than mutating them) — the
-    expensive blake2b over a 64 KB grid runs once per object.  The cheap
-    fields (``N``, ``total``, the grid tail) ride along in the key as a
-    partial guard, but mutating ``prefix_grid`` in place after first use
-    is unsupported: rebuild the profile instead.
-    """
-    if p.prefix_grid is None:
-        return (p.N, p.total)
-    memo = getattr(p, "_grid_blake", None)
-    if memo is None or memo[0] is not p.prefix_grid:     # rebound array
-        memo = (p.prefix_grid, hashlib.blake2b(
-            np.ascontiguousarray(p.prefix_grid).tobytes(),
-            digest_size=16).digest())
-        try:
-            p._grid_blake = memo
-        except Exception:   # pragma: no cover - exotic read-only profiles
-            pass
-    # N/total/tail read live so they guard the cheap mutations too
-    return (p.N, p.total, float(p.prefix_grid[-1]), memo[1])
 
 
 # ---------------------------------------------------------------------------

@@ -43,9 +43,10 @@ def _lane_digest(selector: str, reward: Optional[str]) -> int:
     return _digest(selector if reward is None else f"{selector}+{reward}")
 
 from ..core import (ALGORITHM_NAMES, N_ALGORITHMS, SelectionService,
-                    coefficient_of_variation, exp_chunk)
+                    coefficient_of_variation, exp_chunk, is_sim_policy)
 from ..core.api import Observation
 from .backends import InstanceSpec, LockstepRequest, get_backend
+from .whatif import LoopWhatIf
 from .systems import SYSTEMS, SystemModel, get_system
 from .workloads import APPLICATIONS, Application, get_application
 
@@ -207,17 +208,27 @@ class SelectorRun:
 
 
 def _lane_service(app: Application, selector: str, reward: Optional[str],
-                  seed: int, sweep: Optional[PortfolioSweep]
-                  ) -> SelectionService:
+                  seed: int, sweep: Optional[PortfolioSweep],
+                  system: Optional[SystemModel] = None,
+                  sim_backend=None
+                  ) -> Tuple[SelectionService, Optional[LoopWhatIf]]:
     """Per-lane service: one independent policy per modified loop (LB4OMP
     loop ids).  Oracle lanes carry per-loop overrides with the per-step
-    best from the portfolio sweep."""
+    best from the portfolio sweep.  Simulation-assisted lanes (SimPolicy /
+    SimHybrid) additionally get a :class:`LoopWhatIf` candidate pricer on
+    ``sim_backend`` — returned so the replay can bind the current loop
+    context before each decision."""
     if selector.lower() == "oracle":
         assert sweep is not None, "Oracle needs a portfolio sweep"
         return SelectionService("Oracle", overrides={
             nm: {"best_fn": sweep.oracle_best_fn(li)}
-            for li, nm in enumerate(app.loop_names)})
-    return SelectionService(selector, reward=reward, seed=seed)
+            for li, nm in enumerate(app.loop_names)}), None
+    if is_sim_policy(selector):
+        assert system is not None, "sim-assisted lanes need a machine model"
+        whatif = LoopWhatIf(system, backend=sim_backend)
+        return SelectionService(selector, reward=reward, seed=seed,
+                                simulator=whatif), whatif
+    return SelectionService(selector, reward=reward, seed=seed), None
 
 
 def _lane_rng(app_name: str, system: SystemModel, selector: str,
@@ -235,7 +246,7 @@ def run_selector_sequential(app_name: str, system_name: str, selector: str,
                             reward: Optional[str] = None,
                             T: Optional[int] = None, seed: int = 0,
                             sweep: Optional[PortfolioSweep] = None,
-                            backend=None) -> SelectorRun:
+                            backend=None, sim_backend=None) -> SelectorRun:
     """Reference replay: one cell, one instance at a time.
 
     This is the historical ``run_selector`` loop, kept as the
@@ -248,17 +259,22 @@ def run_selector_sequential(app_name: str, system_name: str, selector: str,
     system = get_system(system_name)
     T = T or app.T
 
-    service = _lane_service(app, selector, reward, seed, sweep)
+    if sim_backend is None:
+        sim_backend = backend
+    service, whatif = _lane_service(app, selector, reward, seed, sweep,
+                                    system=system, sim_backend=sim_backend)
     rng = _lane_rng(app_name, system, selector, chunk_mode, reward, seed)
     total = 0.0
     for t in range(T):
         for li, profile in enumerate(app.loops(t)):
             nm = app.loop_names[li]
+            cp = chunk_param_for(chunk_mode, profile.N, system.P)
+            if whatif is not None:      # bind the loop the decision is about
+                whatif.set_context(profile, cp)
             with service.instance(nm) as inst:
                 # a policy may steer the chunk parameter; the campaign's
                 # chunk mode fills the default
-                d = inst.decision.with_instance_defaults(
-                    chunk_param_for(chunk_mode, profile.N, system.P))
+                d = inst.decision.with_instance_defaults(cp)
                 res = bk.run_instance(profile, system, d.action,
                                       d.chunk_param, rng)
                 inst.report(loop_time=res.loop_time, lib=res.lib)
@@ -295,16 +311,19 @@ class _Lane:
     """Live state of one replay lane: its service (per-loop policies), its
     private noise stream, and the running total."""
 
-    __slots__ = ("spec", "app", "system", "T", "service", "rng", "total")
+    __slots__ = ("spec", "app", "system", "T", "service", "whatif", "rng",
+                 "total")
 
     def __init__(self, spec: CellSpec, app: Application, system: SystemModel,
-                 T: int, seed: int, sweep: Optional[PortfolioSweep]):
+                 T: int, seed: int, sweep: Optional[PortfolioSweep],
+                 sim_backend=None):
         self.spec = spec
         self.app = app
         self.system = system
         self.T = T
-        self.service = _lane_service(app, spec.selector, spec.reward, seed,
-                                     sweep)
+        self.service, self.whatif = _lane_service(
+            app, spec.selector, spec.reward, seed, sweep, system=system,
+            sim_backend=sim_backend)
         self.rng = _lane_rng(spec.app, system, spec.selector,
                              spec.chunk_mode, spec.reward, seed)
         self.total = 0.0
@@ -369,8 +388,12 @@ class ReplayBatch:
                  seed: int = 0,
                  sweeps: Optional[Dict[Tuple[str, str],
                                        PortfolioSweep]] = None,
-                 backend=None):
+                 backend=None, sim_backend=None):
         self.bk = get_backend(backend)
+        if sim_backend is None:
+            # sim-assisted lanes price candidates on the replay backend by
+            # default, so their argmin matches that engine's Oracle
+            sim_backend = backend
         sweeps = sweeps or {}
         apps: Dict[str, Application] = {}
         self.lanes: List[_Lane] = []
@@ -380,7 +403,8 @@ class ReplayBatch:
                 app = apps[spec.app] = get_application(spec.app)
             self.lanes.append(_Lane(
                 spec, app, get_system(spec.system), T or app.T, seed,
-                sweeps.get((spec.app, spec.system))))
+                sweeps.get((spec.app, spec.system)),
+                sim_backend=sim_backend))
         self._apps = apps
         self.T_max = max((lane.T for lane in self.lanes), default=0)
 
@@ -403,10 +427,12 @@ class ReplayBatch:
             loops = self._loops(loops_cache, lane.spec.app, t)
             pids = g.register(lane.spec.app, loops)
             for li, profile in enumerate(loops):
+                cp = chunk_param_for(lane.spec.chunk_mode, profile.N,
+                                     lane.system.P)
+                if lane.whatif is not None:
+                    lane.whatif.set_context(profile, cp)
                 inst = lane.service.instance(lane.app.loop_names[li])
-                d = inst.decision.with_instance_defaults(
-                    chunk_param_for(lane.spec.chunk_mode, profile.N,
-                                    lane.system.P))
+                d = inst.decision.with_instance_defaults(cp)
                 g.requests.append(LockstepRequest(
                     profile_id=pids[li], alg=d.action,
                     chunk_param=d.chunk_param, rng=lane.rng))
@@ -430,7 +456,7 @@ def run_selector(app_name: str, system_name: str, selector: str,
                  chunk_mode: str = "default", reward: Optional[str] = None,
                  T: Optional[int] = None, seed: int = 0,
                  sweep: Optional[PortfolioSweep] = None,
-                 backend=None) -> SelectorRun:
+                 backend=None, sim_backend=None) -> SelectorRun:
     """Execute one selection method over the full time-stepped application.
 
     Every modified loop gets an independent policy via ``SelectionService``
@@ -444,7 +470,7 @@ def run_selector(app_name: str, system_name: str, selector: str,
                     chunk_mode=chunk_mode, reward=reward)
     sweeps = {(app_name, system_name): sweep} if sweep is not None else None
     return ReplayBatch([spec], T=T, seed=seed, sweeps=sweeps,
-                       backend=backend).run()[0]
+                       backend=backend, sim_backend=sim_backend).run()[0]
 
 
 # ---------------------------------------------------------------------------
@@ -459,6 +485,12 @@ SELECTOR_GRID: List[Tuple[str, Optional[str]]] = [
 #: the paper grid plus the §6 expert-seeded RL combination
 EXTENDED_SELECTOR_GRID: List[Tuple[str, Optional[str]]] = \
     SELECTOR_GRID + [("Hybrid", "LT"), ("Hybrid", "LT+LIB")]
+
+#: the extended grid plus the simulation-assisted methods (SimAS-style):
+#: candidate pricing in simulation, zero live exploration for SimPolicy and
+#: a sim-pruned RL window for SimHybrid
+SIM_SELECTOR_GRID: List[Tuple[str, Optional[str]]] = \
+    EXTENDED_SELECTOR_GRID + [("SimPolicy", "LT"), ("SimHybrid", "LT")]
 
 
 @dataclass
@@ -480,7 +512,8 @@ def run_campaign(cells: Sequence[Tuple[str, str]],
                  selectors=SELECTOR_GRID,
                  chunk_modes=CHUNK_MODES,
                  backend=None,
-                 selector_backend=None
+                 selector_backend=None,
+                 sim_backend=None
                  ) -> Dict[Tuple[str, str], CampaignResult]:
     """The full factorial campaign over many Fig. 5 cells at once.
 
@@ -494,7 +527,9 @@ def run_campaign(cells: Sequence[Tuple[str, str]],
     ``backend`` drives the portfolio sweeps; ``selector_backend`` (default:
     same as ``backend``) drives the lockstep replays — pass
     ``selector_backend="python"`` when the adaptive algorithms must see
-    exact per-chunk telemetry rather than the JAX surrogates."""
+    exact per-chunk telemetry rather than the JAX surrogates.
+    ``sim_backend`` (default: same as ``selector_backend``) prices the
+    candidate sets of simulation-assisted lanes (``SIM_SELECTOR_GRID``)."""
     if selector_backend is None:
         selector_backend = backend
     sweeps = {
@@ -507,7 +542,8 @@ def run_campaign(cells: Sequence[Tuple[str, str]],
              for mode in chunk_modes
              for sel, reward in selectors]
     runs = ReplayBatch(lanes, T=T, seed=seed, sweeps=sweeps,
-                       backend=selector_backend).run()
+                       backend=selector_backend,
+                       sim_backend=sim_backend).run()
     by_cell: Dict[Tuple[str, str], Dict] = {tuple(c): {} for c in cells}
     for spec, run in zip(lanes, runs):
         by_cell[(spec.app, spec.system)][spec.key] = run
@@ -528,7 +564,8 @@ def run_campaign_cell(app_name: str, system_name: str,
                       selectors=SELECTOR_GRID,
                       chunk_modes=CHUNK_MODES,
                       backend=None,
-                      selector_backend="python") -> CampaignResult:
+                      selector_backend="python",
+                      sim_backend=None) -> CampaignResult:
     """One Fig. 5 cell (a ``run_campaign`` of a single (app, system) pair).
 
     ``backend`` picks the simulation engine for the heavy portfolio sweep
@@ -538,5 +575,5 @@ def run_campaign_cell(app_name: str, system_name: str,
     return run_campaign([(app_name, system_name)], T=T, reps=reps, seed=seed,
                         selectors=selectors, chunk_modes=chunk_modes,
                         backend=backend,
-                        selector_backend=selector_backend)[
-                            (app_name, system_name)]
+                        selector_backend=selector_backend,
+                        sim_backend=sim_backend)[(app_name, system_name)]

@@ -1,0 +1,108 @@
+"""Loop-instance candidate pricing for simulation-assisted selection.
+
+:class:`LoopWhatIf` is the DES-side *candidate simulator* behind
+``repro.core.simpolicy``: a replay lane binds the current loop profile with
+``set_context`` before consulting its policy, and ``price`` evaluates every
+candidate (algorithm x chunk-parameter variant) through ONE
+``SimBackend.run_batch`` call on a noise-free copy of the machine model —
+deterministic predictions whose argmin coincides with the Oracle's choice on
+noise-free cells (test-enforced on both backends).
+
+Pricing never touches the lane's live rng stream: candidate runs draw from a
+fixed stateless seed, so wiring a ``SimPolicy`` lane into a lockstep replay
+leaves every other lane — and the lane's own noise trajectory — bit-exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import List, Optional, Sequence
+
+from ..core import exp_chunk
+from ..core.api import Observation
+from ..core.simpolicy import Candidate, SimUnavailable
+from .backends import InstanceSpec, get_backend
+from .workloads import profile_digest
+
+#: constant stateless seed for candidate pricing runs (the noise-free system
+#: leaves almost nothing for it to draw; determinism is what matters)
+_PRICE_SEED = (0x51A5,)
+
+#: priced candidate sets kept per (profile, chunk-context) — sphynx-style
+#: time-varying apps produce one entry per time step, so bound it
+_CACHE_SIZE = 512
+
+
+def noise_free(system):
+    """The deterministic twin of a machine model: same dispatch overheads and
+    locality costs, zero stochastic terms."""
+    return dataclasses.replace(system, noise_sigma=0.0, jitter=0.0,
+                               speed_spread=0.0)
+
+
+class LoopWhatIf:
+    """Prices ``SimPolicy`` candidates for DES loop instances.
+
+    One instance serves a whole replay lane: the lane re-binds the current
+    loop with ``set_context(profile, chunk_param)`` before each decision and
+    every candidate is evaluated against that context.  ``backend`` is any
+    ``get_backend`` name/instance (the lane's ``sim_backend``); with the
+    batched JAX engine the full candidate set is one vmapped call.
+    """
+
+    def __init__(self, system, backend=None, deterministic: bool = True):
+        self.bk = get_backend(backend)
+        self.system = noise_free(system) if deterministic else system
+        self._profile = None
+        self._chunk_param = 0
+        self._cache: "OrderedDict[tuple, List[Observation]]" = OrderedDict()
+
+    # -- context ------------------------------------------------------------
+    def set_context(self, profile, chunk_param: int = 0) -> None:
+        """Bind the loop instance the next ``price`` calls are about."""
+        self._profile = profile
+        self._chunk_param = int(chunk_param)
+
+    # -- the candidate-simulator protocol -----------------------------------
+    def candidates(self) -> List[Candidate]:
+        """All 12 algorithms under the context's default chunk parameter,
+        plus their expChunk variants when that differs — LB4OMP's full
+        selection portfolio."""
+        if self._profile is None:
+            raise SimUnavailable("LoopWhatIf has no loop context bound")
+        from ..core import N_ALGORITHMS
+        out = [Candidate(a) for a in range(N_ALGORITHMS)]
+        ec = exp_chunk(self._profile.N, self.system.P)
+        if ec != self._chunk_param:
+            out += [Candidate(a, ec) for a in range(N_ALGORITHMS)]
+        return out
+
+    def price(self, cands: Sequence[Candidate]) -> List[Observation]:
+        """Predicted (loop_time, lib) per candidate via one batched
+        noise-free ``run_batch`` on the configured backend."""
+        if self._profile is None:
+            raise SimUnavailable("LoopWhatIf has no loop context bound")
+        p = self._profile
+        resolved = tuple(
+            (c.alg, self._chunk_param if c.chunk_param is None
+             else int(c.chunk_param)) for c in cands)
+        # profile_digest covers the prefix-grid *content* — mean-normalized
+        # patterns share N*unit totals across time steps, so cheap fields
+        # alone would alias genuinely different load distributions
+        key = (p.name, profile_digest(p), p.unit, p.memory_bound,
+               p.locality_sens, p.c_loc, resolved)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+            return hit
+        specs = [InstanceSpec(profile_id=0, alg=a, chunk_param=cp,
+                              seed=_PRICE_SEED + (a, cp))
+                 for a, cp in resolved]
+        res = self.bk.run_batch([p], self.system, specs)
+        out = [Observation(loop_time=float(t), lib=float(b))
+               for t, b in zip(res.loop_time, res.lib)]
+        self._cache[key] = out
+        if len(self._cache) > _CACHE_SIZE:
+            self._cache.popitem(last=False)
+        return out

@@ -17,6 +17,7 @@ The cost *patterns* implement the imbalance characters stated in Table 2:
 
 from __future__ import annotations
 
+import hashlib
 import math
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -24,6 +25,33 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 GRID = 16384  # prefix-grid resolution
+
+
+def profile_digest(p) -> tuple:
+    """Content key of one profile, memoized on the profile — shared by every
+    per-profile cache (the JAX backend's device-grid uploads, the what-if
+    candidate pricer).
+
+    Profiles are treated as immutable (the repo's ``Application`` classes
+    rebuild ``LoopProfile`` objects rather than mutating them) — the
+    expensive blake2b over a 64 KB grid runs once per object.  The cheap
+    fields (``N``, ``total``, the grid tail) ride along in the key as a
+    partial guard, but mutating ``prefix_grid`` in place after first use
+    is unsupported: rebuild the profile instead.
+    """
+    if p.prefix_grid is None:
+        return (p.N, p.total)
+    memo = getattr(p, "_grid_blake", None)
+    if memo is None or memo[0] is not p.prefix_grid:     # rebound array
+        memo = (p.prefix_grid, hashlib.blake2b(
+            np.ascontiguousarray(p.prefix_grid).tobytes(),
+            digest_size=16).digest())
+        try:
+            p._grid_blake = memo
+        except Exception:   # pragma: no cover - exotic read-only profiles
+            pass
+    # N/total/tail read live so they guard the cheap mutations too
+    return (p.N, p.total, float(p.prefix_grid[-1]), memo[1])
 
 
 def stack_prefix_grids(profiles) -> np.ndarray:

@@ -26,10 +26,36 @@ class _Strategy:
 
 class _St:
     @staticmethod
-    def integers(lo, hi):
+    def integers(min_value, max_value):
+        lo, hi = min_value, max_value
         mid = (lo + hi) // 2
         return _Strategy(sorted({lo, min(lo + 1, hi), mid,
                                  max(hi - 1, lo), hi}))
+
+    @staticmethod
+    def floats(min_value, max_value, **_ignored):
+        lo, hi = float(min_value), float(max_value)
+        return _Strategy(sorted({lo, (lo + hi) / 2, hi}))
+
+    @staticmethod
+    def lists(elems, min_size=0, max_size=8):
+        """A deterministic spread of lists over the element strategy's
+        values: cycled, reversed-cycle, and constant-extreme fills at the
+        size bounds."""
+        vals = list(elems.values)
+        out = []
+        for size in sorted({min_size, (min_size + max_size) // 2, max_size}):
+            cyc = [vals[i % len(vals)] for i in range(size)]
+            out.extend([cyc, cyc[::-1],
+                        [vals[0]] * size, [vals[-1]] * size])
+        # dedupe while preserving order
+        seen, uniq = set(), []
+        for lst in out:
+            key = tuple(lst)
+            if key not in seen:
+                seen.add(key)
+                uniq.append(lst)
+        return _Strategy(uniq)
 
     @staticmethod
     def sampled_from(seq):
