@@ -1,13 +1,20 @@
 """L3 transfer benchmark — chunk-self-scheduled request dispatch over replica
 groups: fixed algorithms vs the selection methods on a heavy-tailed request
-stream (the serving analogue of Fig. 5)."""
+stream (the serving analogue of Fig. 5).
+
+``smoke()`` is the CI sanity gate on a reduced stream: the selection methods
+must not collapse (each stays within ``SMOKE_VS_BEST_FIXED`` of the best
+fixed portfolio algorithm).  Results are recorded to
+``results/bench_serving.json`` (the bench-wide ``results/*.json``
+convention); the legacy ``serving_dispatch.csv`` is kept for the plotting
+scripts.
+"""
 
 from __future__ import annotations
 
 import csv
+import json
 import os
-
-import numpy as np
 
 from repro.core import ALGORITHM_NAMES
 from repro.data import synthetic_requests
@@ -15,8 +22,18 @@ from repro.serving import DispatchSimulator
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "results")
 
+SELECTORS = [("RandomSel", None), ("ExhaustiveSel", None),
+             ("QLearn", "LT"), ("QLearn", "LIB"),
+             ("SARSA", "LT"), ("Hybrid", "LT"), ("Hybrid", "p95")]
 
-def run(n_requests: int = 40 * 256, replicas: int = 16, seed: int = 0):
+#: smoke gate: max tolerated makespan ratio of any selection method vs the
+#: best fixed algorithm on the reduced stream (measured <=1.10; the margin
+#: absorbs the exploration overhead of the learned methods at small T)
+SMOKE_VS_BEST_FIXED = 1.35
+
+
+def run(n_requests: int = 40 * 256, replicas: int = 16, seed: int = 0,
+        selectors=SELECTORS):
     reqs = synthetic_requests(n_requests, seed=seed, heavy_tail=1.15)
     rows = []
     # fixed portfolio baselines
@@ -28,10 +45,7 @@ def run(n_requests: int = 40 * 256, replicas: int = 16, seed: int = 0):
         rows.append((f"fixed_{ALGORITHM_NAMES[alg]}", s["total_makespan"],
                      s["mean_lib"]))
     # selection methods
-    for sel, reward in [("RandomSel", None), ("ExhaustiveSel", None),
-                        ("QLearn", "LT"), ("QLearn", "LIB"),
-                        ("SARSA", "LT"), ("Hybrid", "LT"),
-                        ("Hybrid", "p95")]:
+    for sel, reward in selectors:
         sim = DispatchSimulator(replicas, selector=sel,
                                 reward=reward or "LT", seed=seed)
         sim.run(reqs)
@@ -41,9 +55,38 @@ def run(n_requests: int = 40 * 256, replicas: int = 16, seed: int = 0):
     return rows
 
 
+def _results(rows, n_fixed: int = 12) -> dict:
+    best_fixed = min(r[1] for r in rows[:n_fixed])
+    return {
+        "best_fixed_makespan_s": round(best_fixed, 6),
+        "methods": {name: {"total_makespan_s": round(mk, 6),
+                           "mean_lib_pct": round(lib, 2),
+                           "vs_best_fixed": round(mk / best_fixed, 4)}
+                    for name, mk, lib in rows},
+    }
+
+
+def smoke() -> None:
+    """CI dispatch gate (reduced stream): no selection method may collapse
+    past SMOKE_VS_BEST_FIXED of the best fixed portfolio algorithm."""
+    rows = run(n_requests=8 * 256, replicas=8,
+               selectors=[("QLearn", "LT"), ("Hybrid", "LT")])
+    res = _results(rows)
+    worst = max((m["vs_best_fixed"], name)
+                for name, m in res["methods"].items()
+                if not name.startswith("fixed_"))
+    print(f"smoke serving: worst selector vs best fixed = "
+          f"{worst[0]:.3f}x ({worst[1]})")
+    assert worst[0] <= SMOKE_VS_BEST_FIXED, \
+        (f"{worst[1]} makespan {worst[0]:.3f}x best fixed exceeds the "
+         f"{SMOKE_VS_BEST_FIXED}x gate")
+
+
 def main() -> list:
     os.makedirs(OUT, exist_ok=True)
     rows = run()
+    with open(os.path.join(OUT, "bench_serving.json"), "w") as f:
+        json.dump(_results(rows), f, indent=2)
     with open(os.path.join(OUT, "serving_dispatch.csv"), "w",
               newline="") as f:
         w = csv.writer(f)

@@ -16,6 +16,7 @@ Benches:
     replay       §Backends   lockstep multi-cell replay vs sequential
     event_kernel §Backends   while_loop vs fused Pallas event core
     simpolicy    §SimAS      simulation-assisted selection regret + latency
+    fleet        §Fleet      trace-driven routing over replica groups
 
 ``--smoke`` is the single CI entry point: it runs every registered smoke
 gate for the requested tier and ALWAYS writes ``results/smoke_summary.json``
@@ -26,6 +27,7 @@ the summary is the triage artifact CI uploads with ``if: always()``.
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import os
 import sys
@@ -34,11 +36,15 @@ import traceback
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
-#: every CI smoke gate: name -> (module, tier).  tier1 gates are fast drift
-#: checks run next to the unit tests; slow gates ride the campaign-scale job.
+#: every CI smoke gate: name -> (module, tier | tuple-of-tiers).  tier1
+#: gates are fast drift checks run next to the unit tests; slow gates ride
+#: the campaign-scale job; a tuple runs the gate on every listed tier (the
+#: gate's ``smoke(tier)`` sizes itself when its signature takes the tier).
 SMOKE_GATES = {
     "backends": ("bench_backends", "tier1"),
     "simpolicy": ("bench_simpolicy", "tier1"),
+    "serving": ("bench_serving", "tier1"),
+    "fleet": ("bench_fleet", ("tier1", "slow")),
     "replay": ("bench_replay", "slow"),
     "event_kernel": ("bench_event_kernel", "slow"),
 }
@@ -62,8 +68,10 @@ def run_smoke(tier: str) -> int:
 
     failures = 0
     for name, (module, gate_tier) in SMOKE_GATES.items():
-        rec = {"tier": gate_tier}
-        if tier not in ("all", gate_tier):
+        tiers = (gate_tier,) if isinstance(gate_tier, str) else gate_tier
+        rec = {"tier": "+".join(tiers)}
+        run_tier = tier if tier != "all" else tiers[0]
+        if tier != "all" and tier not in tiers:
             rec["status"] = "skipped"
             summary["gates"][name] = rec
             flush_summary()
@@ -73,7 +81,11 @@ def run_smoke(tier: str) -> int:
         flush_summary()
         t0 = time.perf_counter()
         try:
-            importlib.import_module(f"benchmarks.{module}").smoke()
+            smoke_fn = importlib.import_module(f"benchmarks.{module}").smoke
+            if "tier" in inspect.signature(smoke_fn).parameters:
+                smoke_fn(tier=run_tier)  # tier-sized gates (e.g. fleet)
+            else:
+                smoke_fn()
             rec["status"] = "ok"
         except Exception as e:
             failures += 1
@@ -104,7 +116,7 @@ def main() -> None:
 
     from . import (bench_anova, bench_autotune, bench_backends, bench_chunks,
                    bench_cov, bench_degradation, bench_event_kernel,
-                   bench_replay, bench_roofline, bench_serving,
+                   bench_fleet, bench_replay, bench_roofline, bench_serving,
                    bench_simpolicy, bench_traces)
     benches = {
         "chunks": bench_chunks.main,
@@ -119,6 +131,7 @@ def main() -> None:
         "replay": bench_replay.main,
         "event_kernel": bench_event_kernel.main,
         "simpolicy": bench_simpolicy.main,
+        "fleet": bench_fleet.main,
     }
     if args.only:
         benches = {args.only: benches[args.only]}

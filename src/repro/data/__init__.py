@@ -1,1 +1,2 @@
-from .pipeline import DataConfig, TokenPipeline, Request, synthetic_requests
+from .pipeline import (DataConfig, TokenPipeline, Request, field_rng,
+                       request_lengths, synthetic_requests)

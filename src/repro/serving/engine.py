@@ -116,9 +116,13 @@ class DispatchSimulator:
                  cost_model: Optional[ReplicaCostModel] = None,
                  dispatch_overhead: float = 0.2e-3,
                  selector_kw: Optional[dict] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 region: str = "dispatch"):
         self.R = n_replicas
         self.chunk_param = chunk_param
+        #: SelectionService region id — the fleet layer names one region per
+        #: replica group so warm-start snapshots (store_dir) never collide
+        self.region = region
         self.h = dispatch_overhead
         self.cost = cost_model or ReplicaCostModel()
         #: simulation backend for ``what_if`` queries ("jax" evaluates the
@@ -178,7 +182,7 @@ class DispatchSimulator:
         scheduling algorithm; replicas self-assign request-chunks."""
         if self._whatif is not None:    # bind the wave the decision is about
             self._whatif.set_requests(requests)
-        inst = self.service.instance("dispatch")
+        inst = self.service.instance(self.region)
         with inst:
             d = inst.decision.with_instance_defaults(self.chunk_param)
             alg_idx = d.action
@@ -224,6 +228,21 @@ class DispatchSimulator:
                        makespan=makespan, lib=lib, chunks=chunks)
         self.stats.append(st)
         return st
+
+    @property
+    def busy(self) -> np.ndarray:
+        """Per-replica busy offsets carried into the next wave (relative:
+        ``run_wave`` re-bases them so the minimum is the dispatch origin).
+        The fleet simulator reads/writes this around each routed shard to
+        keep its absolute clock and the dispatcher's relative one in sync."""
+        return self._replica_free.copy()
+
+    @busy.setter
+    def busy(self, offsets) -> None:
+        offsets = np.asarray(offsets, dtype=np.float64)
+        if offsets.shape != (self.R,):
+            raise ValueError(f"busy offsets must have shape ({self.R},)")
+        self._replica_free = offsets.copy()
 
     def run(self, requests: List[Request], wave_size: int = 256
             ) -> List[WaveStats]:

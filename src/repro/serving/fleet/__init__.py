@@ -1,0 +1,17 @@
+"""Fleet-scale serving: trace-driven routing over continuous-batching
+replica groups (see ``simulator``/``router``/``traces``)."""
+
+from .router import (ROUTERS, LeastOutstandingRouter, RoundRobinRouter,
+                     RouterPolicy, WhatIfRouter, make_router)
+from .simulator import (AdmissionControl, FleetReport, FleetSimulator,
+                        FleetView)
+from .traces import (TRACE_KINDS, ArrivalTrace, bursty_trace, diurnal_trace,
+                     make_trace, poisson_trace)
+
+__all__ = [
+    "ArrivalTrace", "TRACE_KINDS", "make_trace", "poisson_trace",
+    "bursty_trace", "diurnal_trace",
+    "RouterPolicy", "RoundRobinRouter", "LeastOutstandingRouter",
+    "WhatIfRouter", "ROUTERS", "make_router",
+    "FleetSimulator", "FleetView", "FleetReport", "AdmissionControl",
+]

@@ -1,0 +1,294 @@
+"""Fleet-scale serving simulator: replica groups behind a router.
+
+``FleetSimulator`` composes the repo's four existing layers into one region:
+
+- **data** — an :class:`~repro.serving.fleet.traces.ArrivalTrace` drives
+  asynchronous admissions (Poisson / bursty / diurnal);
+- **serving** — each replica group is a
+  :class:`~repro.serving.engine.DispatchSimulator` (chunk-self-scheduled
+  continuous-batching waves over R replicas);
+- **sim backends** — routing decisions are priced through the backends'
+  batched ``what_if_routes`` (one call per admission wave);
+- **core policies** — every group owns a per-region
+  :class:`~repro.core.service.SelectionService` region (``region{g}``), so
+  SimPolicy/SimHybrid/QLearn state is group-local and warm-start snapshots
+  (``store_dir``) round-trip per group.
+
+Time model: the fleet clock advances wave-by-wave.  Each iteration admits
+up to the controller's budget from the pending queue, routes the admitted
+batch, and dispatches every shard on its group with the group's *absolute*
+per-replica finish times converted to the dispatcher's relative busy
+offsets (idle time between waves really elapses).  While a backlog remains
+the next wave opens when the earliest replica anywhere frees — the
+continuous-batching refill trigger.  A request's latency is its group's
+wave-drain time minus its arrival (wave granularity, matching the per-wave
+LIB/makespan the selection layer observes).
+"""
+
+from __future__ import annotations
+
+import os
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from ...core import percent_load_imbalance
+from ...data.pipeline import Request
+from ...sim.backends import get_backend
+from ..engine import DispatchSimulator, ReplicaCostModel
+from .router import RouterPolicy, make_router, request_cost
+from .traces import ArrivalTrace
+
+
+@dataclass
+class FleetView:
+    """Dispatch-time snapshot handed to routers and admission control."""
+
+    now: float
+    busy: List[np.ndarray]          # per-group (R,) offsets relative to now
+    n_replicas: int
+    cost: ReplicaCostModel
+    h: float                        # per-chunk dispatch overhead
+    backend: object = None          # SimBackend for what-if pricing
+
+    def cost_prefix(self, requests: Sequence[Request]) -> np.ndarray:
+        """(N+1,) cumulative service-cost prefix of a request shard (the
+        same token cost model ``DispatchSimulator`` dispatches under)."""
+        tokens = np.array([r.prompt_len + r.gen_len for r in requests],
+                          dtype=np.float64)
+        return (self.cost.per_token
+                * np.concatenate([[0.0], np.cumsum(tokens)])
+                + self.cost.per_request * np.arange(len(tokens) + 1))
+
+    def price_routes(self, prefixes, avails, cands) -> np.ndarray:
+        """One batched (slot, algorithm, chunk) pricing call — the fleet's
+        SimAS-style consultation."""
+        return self.backend.what_if_routes(prefixes, self.n_replicas,
+                                           avails, self.h, self.cost.fixed,
+                                           cands)
+
+
+@dataclass
+class AdmissionControl:
+    """Deadlock-free backpressure: shapes (never fully stalls) each wave.
+
+    - ``wave_quota`` — per-group admission cap per wave (decision
+      granularity);
+    - ``batch_window`` — wave-formation window in seconds: an underloaded
+      fleet waits up to this long past the oldest pending arrival for the
+      wave to fill before dispatching (in the saturated regime the window
+      has already elapsed, so waves go out full and immediately);
+    - ``queue_depth`` — per-replica outstanding-work bound in seconds: a
+      wave may not push any further work once the fleet-wide outstanding
+      budget ``queue_depth * replicas`` is full (queue-depth backpressure);
+    - ``p95_slo`` — predicted-p95 backpressure: while the oldest pending
+      wait plus the predicted service horizon of the admitted batch exceeds
+      the SLO, the wave is halved (down to ``min_admit``, so the queue
+      always drains).
+    """
+
+    wave_quota: int = 256
+    batch_window: float = 0.05
+    queue_depth: float = float("inf")
+    p95_slo: Optional[float] = None
+    min_admit: int = 8
+
+    def admit(self, pending: Sequence[Request], now: float,
+              view: FleetView) -> int:
+        if not pending:
+            return 0
+        G = len(view.busy)
+        R = view.n_replicas
+        k = min(len(pending), self.wave_quota * G)
+        head_costs = np.array([request_cost(r, view.cost)
+                               for r in list(pending)[:k]])
+        mean_cost = float(head_costs.mean()) if len(head_costs) else 0.0
+        outstanding = float(sum(b.sum() for b in view.busy))
+        if np.isfinite(self.queue_depth):
+            budget = max(0.0, self.queue_depth * G * R - outstanding)
+            k = min(k, int(budget / max(mean_cost, 1e-12)))
+        if self.p95_slo is not None and k > self.min_admit:
+            oldest = now - pending[0].arrival
+            busy_p95 = float(np.percentile(np.concatenate(view.busy), 95))
+            while k > self.min_admit:
+                pred = oldest + busy_p95 \
+                    + float(head_costs[:k].sum()) / (G * R)
+                if pred <= self.p95_slo:
+                    break
+                k //= 2
+        return max(min(self.min_admit, len(pending)), k)
+
+
+@dataclass
+class FleetReport:
+    """Fleet-level outcome of one trace run."""
+
+    n_requests: int
+    makespan: float                 # last drain time minus first arrival
+    throughput: float               # requests / makespan
+    p50: float
+    p95: float
+    p99: float
+    mean_latency: float
+    fleet_lib: float                # Eq. 8 LIB over all fleet replicas
+    mean_wave_lib: float            # mean per-wave LIB across group waves
+    waves: int
+    mean_wave_size: float
+    deferred: int                   # pending-request-waves held back
+    per_group: List[Dict] = field(default_factory=list)
+    latencies: Optional[np.ndarray] = None
+
+    def summary(self) -> Dict:
+        return {k: (round(v, 6) if isinstance(v, float) else v)
+                for k, v in self.__dict__.items()
+                if k not in ("per_group", "latencies")}
+
+
+class FleetSimulator:
+    """N ``DispatchSimulator`` replica groups behind a pluggable router."""
+
+    def __init__(self, n_groups: int = 4, replicas_per_group: int = 8,
+                 router: Union[str, RouterPolicy, None] = "whatif",
+                 selector: Optional[str] = None, reward: str = "LT",
+                 chunk_param: int = 0, seed: int = 0,
+                 cost_model: Optional[ReplicaCostModel] = None,
+                 dispatch_overhead: float = 0.2e-3,
+                 backend: Optional[str] = None,
+                 admission: Optional[AdmissionControl] = None,
+                 store_dir: Optional[str] = None,
+                 selector_kw: Optional[dict] = None):
+        self.G = n_groups
+        self.R = replicas_per_group
+        self.cost = cost_model or ReplicaCostModel()
+        self.h = dispatch_overhead
+        self.router = make_router(router)
+        self.admission = admission or AdmissionControl()
+        self.backend = get_backend(backend)
+        self.store_dir = store_dir
+        kw = dict(selector_kw or {})
+        if store_dir is not None:
+            os.makedirs(store_dir, exist_ok=True)
+            kw.setdefault("store_dir", store_dir)
+        # one region per group: distinct warm-start keys AND decorrelated
+        # policy rng streams from the same base seed
+        self.groups = [
+            DispatchSimulator(replicas_per_group, selector=selector,
+                              reward=reward, chunk_param=chunk_param,
+                              seed=seed, cost_model=self.cost,
+                              dispatch_overhead=dispatch_overhead,
+                              selector_kw=dict(kw), backend=backend,
+                              region=f"region{g}")
+            for g in range(n_groups)]
+
+    # -- warm-start round-trip ----------------------------------------------
+    def save_state(self) -> List[str]:
+        """Persist every group's region policy (requires ``store_dir``);
+        a fresh fleet on the same store_dir warm-starts each region."""
+        paths: List[str] = []
+        for sim in self.groups:
+            if sim.service.store_dir is not None and sim.service.regions:
+                paths.extend(sim.service.save())
+        return paths
+
+    def warm_started(self) -> List[bool]:
+        return [sim.service.warm_started(sim.region) for sim in self.groups]
+
+    # -- simulation ----------------------------------------------------------
+    def _view(self, now: float, finish: np.ndarray) -> FleetView:
+        busy = [np.maximum(finish[g] - now, 0.0) for g in range(self.G)]
+        return FleetView(now=now, busy=busy, n_replicas=self.R,
+                         cost=self.cost, h=self.h, backend=self.backend)
+
+    def run(self, trace: Union[ArrivalTrace, Sequence[Request]],
+            keep_latencies: bool = False) -> FleetReport:
+        reqs = trace.requests if isinstance(trace, ArrivalTrace) \
+            else list(trace)
+        n = len(reqs)
+        finish = np.zeros((self.G, self.R))     # absolute replica finishes
+        busy_tot = np.zeros((self.G, self.R))   # accumulated work seconds
+        lats: List[np.ndarray] = []
+        pending: deque = deque()
+        i = 0
+        now = 0.0
+        waves = 0
+        admitted = 0
+        deferred = 0
+        t0 = reqs[0].arrival if reqs else 0.0
+        quota = self.admission.wave_quota * self.G
+        window = self.admission.batch_window
+        while i < n or pending:
+            if not pending and reqs[i].arrival > now:
+                now = reqs[i].arrival
+            while i < n and reqs[i].arrival <= now:
+                pending.append(reqs[i])
+                i += 1
+            if i < n and len(pending) < quota and window > 0.0:
+                # wave formation: wait for the quota to fill or the batch
+                # window (measured from the oldest pending arrival) to
+                # close, whichever is first — a no-op once saturated
+                t_close = pending[0].arrival + window
+                t_full = reqs[min(i + quota - len(pending), n) - 1].arrival
+                t_open = min(t_close, t_full)
+                if t_open > now:
+                    now = t_open
+                    while i < n and reqs[i].arrival <= now:
+                        pending.append(reqs[i])
+                        i += 1
+            view = self._view(now, finish)
+            k = self.admission.admit(pending, now, view)
+            batch = [pending.popleft() for _ in range(k)]
+            deferred += len(pending)
+            shards = self.router.route(batch, view)
+            wave_lat = np.empty(len(batch))
+            w = 0
+            for g, shard in enumerate(shards):
+                if not shard:
+                    continue
+                busy = view.busy[g]
+                base = float(busy.min())
+                sim = self.groups[g]
+                # re-base to the dispatcher's relative origin (= the time
+                # its earliest replica frees)
+                sim.busy = busy - base
+                st = sim.run_wave(shard, waves)
+                new_busy = sim.busy
+                busy_tot[g] += new_busy - (busy - base)
+                finish[g] = (now + base) + new_busy
+                done = now + base + st.makespan
+                for r in shard:
+                    wave_lat[w] = done - r.arrival
+                    w += 1
+            lats.append(wave_lat)
+            admitted += len(batch)
+            waves += 1
+            if pending:
+                # saturated: reopen when the earliest replica frees
+                now = max(now, float(finish.min(axis=1).min()))
+        lat = np.concatenate(lats) if lats else np.empty(0)
+        makespan = float(finish.max() - t0) if n else 0.0
+        wave_libs = np.array([s.lib for sim in self.groups
+                              for s in sim.stats])
+        report = FleetReport(
+            n_requests=n,
+            makespan=makespan,
+            throughput=n / max(makespan, 1e-12),
+            p50=float(np.percentile(lat, 50)) if n else 0.0,
+            p95=float(np.percentile(lat, 95)) if n else 0.0,
+            p99=float(np.percentile(lat, 99)) if n else 0.0,
+            mean_latency=float(lat.mean()) if n else 0.0,
+            fleet_lib=percent_load_imbalance(busy_tot.ravel()),
+            mean_wave_lib=float(wave_libs.mean()) if len(wave_libs) else 0.0,
+            waves=waves,
+            mean_wave_size=admitted / max(waves, 1),
+            deferred=deferred,
+            per_group=[{"region": sim.region,
+                        "waves": len(sim.stats),
+                        "requests": int(sum(s.n_requests
+                                            for s in sim.stats)),
+                        "busy_s": float(busy_tot[g].sum()),
+                        "lib": percent_load_imbalance(busy_tot[g])}
+                       for g, sim in enumerate(self.groups)],
+            latencies=lat if keep_latencies else None)
+        return report

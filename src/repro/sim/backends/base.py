@@ -140,3 +140,35 @@ class SimBackend(abc.ABC):
         makespan per entry of ``algs`` — the serving policy's batched
         what-if query (SimAS-style online consultation).
         """
+
+    def what_if_routes(self, prefixes: Sequence[np.ndarray],
+                       n_replicas: int,
+                       init_avails: Sequence[np.ndarray], h: float,
+                       fixed: float,
+                       cands: Sequence[Tuple[int, int, int]]) -> np.ndarray:
+        """Fleet-batched what-if: candidates span (routing slot, algorithm,
+        chunk parameter).
+
+        A *slot* is one replica group handed one candidate request shard:
+        ``prefixes[s]`` is that shard's (N_s+1,) cumulative cost prefix and
+        ``init_avails[s]`` the group's (R,) busy offsets at dispatch time.
+        ``cands`` rows are ``(slot, alg, chunk_param)``; the return value is
+        one predicted makespan per row — what the fleet router consumes to
+        price candidate (replica-group, algorithm, chunk) assignments in a
+        single consultation per admission wave.
+
+        This base implementation fans out over :meth:`what_if_wave` (one
+        call per distinct (slot, chunk) pair); batched engines override it
+        to evaluate every candidate row in one device call.
+        """
+        out = np.zeros(len(cands))
+        groups: dict = {}
+        for i, (slot, alg, cp) in enumerate(cands):
+            groups.setdefault((int(slot), int(cp)), []).append((i, int(alg)))
+        for (slot, cp), rows in groups.items():
+            mk = self.what_if_wave(prefixes[slot], n_replicas,
+                                   init_avails[slot], h, fixed,
+                                   [a for _, a in rows], chunk_param=cp)
+            for (i, _), m in zip(rows, mk):
+                out[i] = m
+        return out

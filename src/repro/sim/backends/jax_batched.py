@@ -246,6 +246,20 @@ def _wave_eval_impl(R: int, core: str, eff, count, forced, init_avail, h):
     return fin.max(axis=1)
 
 
+def _route_eval_impl(R: int, core: str, eff, count, forced, init_avails, h):
+    """Fleet variant of :func:`_wave_eval_impl`: every candidate row carries
+    its OWN (R,) busy-offset vector (rows span replica groups with distinct
+    busy-states, not just algorithms over one wave), so ``init_avails`` is
+    (A, R) instead of a shared broadcast."""
+    A = eff.shape[0]
+    speed = jnp.ones((A, R), jnp.float32)
+    jitter = init_avails.astype(jnp.float32)
+    h_eff = jnp.full((A,), h, jnp.float32)
+    bc = jnp.zeros((A,), jnp.float32)
+    fin = _core_finish(core, eff, speed, jitter, h_eff, bc, forced, count)
+    return fin.max(axis=1)
+
+
 # donate_argnums was evaluated for both cores and rejected: donation only
 # pays when an output can alias a donated input, and every output here —
 # mk/lib (B,), finish (B, P), wave makespans (A,) — is orders of magnitude
@@ -253,6 +267,7 @@ def _wave_eval_impl(R: int, core: str, eff, count, forced, init_avail, h):
 # that warns per compiled shape on every platform.
 _batched_events = jax.jit(_batched_events_impl, static_argnums=(0, 1))
 _wave_eval = jax.jit(_wave_eval_impl, static_argnums=(0, 1))
+_route_eval = jax.jit(_route_eval_impl, static_argnums=(0, 1))
 
 
 # ---------------------------------------------------------------------------
@@ -592,6 +607,74 @@ class JaxBatchedBackend(SimBackend):
                 np.float32(h + fixed)))
             for j, (k, *_rest) in enumerate(batched):
                 out[k] = mks[j]
+        return out
+
+    def what_if_routes(self, prefixes: Sequence[np.ndarray],
+                       n_replicas: int,
+                       init_avails: Sequence[np.ndarray], h: float,
+                       fixed: float,
+                       cands: Sequence[Tuple[int, int, int]]) -> np.ndarray:
+        """Every (slot, alg, chunk) candidate row of a fleet routing
+        decision in ONE ``_route_eval`` call — the rows differ in busy-state
+        as well as schedule, so each carries its own (R,) offset vector.
+        STATIC default-chunk rows take the float64 closed form host-side,
+        exactly like :meth:`what_if_wave`."""
+        R = n_replicas
+        prefixes = [np.asarray(p, dtype=np.float64) for p in prefixes]
+        avails = [np.asarray(a, dtype=np.float64) for a in init_avails]
+        out = np.zeros(len(cands))
+        batched: List[Tuple[int, int, np.ndarray, np.ndarray,
+                            Optional[np.ndarray]]] = []
+        for i, (slot, alg, cp) in enumerate(cands):
+            prefix = prefixes[slot]
+            N = len(prefix) - 1
+            if N <= 0:
+                out[i] = avails[slot].max() if len(avails[slot]) else 0.0
+                continue
+            if alg == 0 and cp <= 0:
+                bounds = np.linspace(0, N, R + 1).round().astype(int)
+                free = avails[slot].copy()
+                nonempty = np.diff(bounds) > 0
+                free[: R] += np.diff(prefix[bounds]) + fixed * nonempty
+                out[i] = free.max()
+                continue
+            if alg == 5:
+                # steal cache keys include the per-wave unit cost, so it
+                # would never hit — skip it
+                unit = float(prefix[-1] - prefix[0]) / max(N, 1)
+                st, sz, pes, _ = self._steal_schedule(
+                    N, R, cp, _UniformStub(N, unit), _NoLocStub(),
+                    cache=False)
+                batched.append((i, slot, st.astype(np.int64), sz, pes))
+            else:
+                # cache=True (unlike what_if_wave): a saturated fleet
+                # dispatches quota-sized shards wave after wave, so the
+                # (alg, N, P, cp) keys DO repeat; the LRU bound caps the
+                # drifting-size tail
+                sz = self._central_schedule(alg, N, R, cp)
+                st = np.concatenate([[0], np.cumsum(sz)[:-1]])
+                batched.append((i, slot, st, sz.astype(np.int32), None))
+        if batched:
+            K = _pow2_rows(max(len(b[3]) for b in batched))
+            A = len(batched)
+            eff = np.zeros((A, K), np.float32)
+            forced = np.full((A, K), -1, np.int32)
+            cnt = np.zeros(A, np.int32)
+            av = np.zeros((A, R), np.float32)
+            for j, (_, slot, st, sz, pes) in enumerate(batched):
+                n = len(sz)
+                prefix = prefixes[slot]
+                eff[j, :n] = prefix[st + sz] - prefix[st]
+                cnt[j] = n
+                av[j] = avails[slot]
+                if pes is not None:
+                    forced[j, :n] = pes
+            mks = np.asarray(_route_eval(
+                R, self.event_core, jnp.asarray(eff), jnp.asarray(cnt),
+                jnp.asarray(forced), jnp.asarray(av),
+                np.float32(h + fixed)))
+            for j, (i, *_rest) in enumerate(batched):
+                out[i] = mks[j]
         return out
 
 

@@ -1,0 +1,160 @@
+"""Serving-engine primitives: ContinuousBatcher accounting, WaveWhatIf
+busy-state pricing, and the DispatchSimulator busy/region surface the fleet
+layer builds on."""
+
+import numpy as np
+import pytest
+
+from repro.core.simpolicy import Candidate, SimUnavailable
+from repro.data import synthetic_requests
+from repro.data.pipeline import Request
+from repro.serving import ContinuousBatcher, DispatchSimulator
+from repro.serving.engine import WaveWhatIf
+
+
+# ---------------------------------------------------------------------------
+# ContinuousBatcher: deque refill / eos / completion accounting
+# ---------------------------------------------------------------------------
+
+def _fake_step(params, cache, tokens):
+    # deterministic "decode": logits whose argmax echoes the input tokens
+    logits = np.eye(8, dtype=np.float32)[np.asarray(tokens) % 8]
+    return logits, cache
+
+
+def _batcher(slots):
+    return ContinuousBatcher(_fake_step, init_cache_fn=None,
+                             batch_slots=slots)
+
+
+def _reqs(gens):
+    return [Request(i, 16, g, 0.0) for i, g in enumerate(gens)]
+
+
+def test_batcher_refill_and_completion_accounting():
+    b = _batcher(2)
+    b.submit(_reqs([2, 1, 3, 2, 1]))
+    out = b.run(None, np.zeros(2), np.zeros(2, np.int32))
+    # tokens_out counts one token per active slot per step == total gen
+    assert out["tokens"] == 2 + 1 + 3 + 2 + 1
+    assert out["completed"] == 5
+    # list scheduling on 2 slots; completions ordered by finish step then
+    # slot index (rid3 lands in slot 0, so it reports before rid2)
+    assert out["steps"] == 5
+    assert [rid for rid, _ in b.completed] == [1, 0, 3, 2, 4]
+    assert all(a is None for a in b.active)
+    assert not b.queue
+
+
+def test_batcher_max_steps_leaves_partial_state():
+    b = _batcher(2)
+    b.submit(_reqs([2, 1, 3]))
+    out = b.run(None, np.zeros(2), np.zeros(2, np.int32), max_steps=2)
+    assert out["steps"] == 2
+    # the two short requests finished; the refilled long one is mid-decode
+    assert [rid for rid, _ in b.completed] == [1, 0]
+    assert sum(a is not None for a in b.active) == 1
+    # a second run drains the rest without resubmission
+    out2 = b.run(None, np.zeros(2), np.zeros(2, np.int32))
+    assert len(b.completed) == 3
+    assert out2["completed"] == 3       # completed list is cumulative
+    assert b.tokens_out == 2 + 1 + 3    # and so is the token counter
+
+
+def test_batcher_refill_is_fifo():
+    b = _batcher(1)
+    b.submit(_reqs([1, 1, 1]))
+    b.run(None, np.zeros(1), np.zeros(1, np.int32))
+    assert [rid for rid, _ in b.completed] == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# WaveWhatIf: candidate-set pricing against the replica busy-state
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def wave():
+    sim = DispatchSimulator(4, selector="Fixed",
+                            selector_kw={"algorithm": 1}, seed=0)
+    reqs = synthetic_requests(32, seed=3)
+    return sim, WaveWhatIf(sim), reqs
+
+
+def test_wavewhatif_requires_bound_wave(wave):
+    _sim, w, _reqs = wave
+    with pytest.raises(SimUnavailable):
+        w.candidates()
+    with pytest.raises(SimUnavailable):
+        w.price([Candidate(0)])
+
+
+def test_wavewhatif_candidates_cover_portfolio_and_chunk_variant(wave):
+    _sim, w, reqs = wave
+    w.set_requests(reqs)
+    cands = w.candidates()
+    # 12 portfolio algorithms at the dispatcher's chunk param plus the
+    # exp_chunk variant of each (chunk_param defaults to 0 != exp_chunk)
+    assert len(cands) == 24
+    assert sorted({c.alg for c in cands}) == list(range(12))
+    assert len({c.chunk_param for c in cands}) == 2
+
+
+def test_wavewhatif_price_matches_batched_what_if(wave):
+    sim, w, reqs = wave
+    w.set_requests(reqs)
+    cands = [Candidate(0), Candidate(2, 4), Candidate(6), Candidate(4, 4)]
+    obs = w.price(cands)
+    # grouped by chunk param under the hood, but order-preserving
+    by_cp = {cp: sim.what_if(reqs, algs=[c.alg for c in cands
+                                         if c.chunk_param == cp],
+                             chunk_param=cp)
+             for cp in (None, 4)}
+    expect = [by_cp[None][0], by_cp[4][0], by_cp[None][1], by_cp[4][1]]
+    assert np.allclose([o.loop_time for o in obs], expect)
+
+
+def test_wavewhatif_prices_reflect_busy_state(wave):
+    sim, w, reqs = wave
+    w.set_requests(reqs)
+    cands = w.candidates()
+    idle = np.array([o.loop_time for o in w.price(cands)])
+    # skew the replica busy-state: predicted makespans can only grow
+    sim.busy = np.array([0.0, 0.05, 0.1, 0.2])
+    busy = np.array([o.loop_time for o in w.price(cands)])
+    assert np.all(busy >= idle - 1e-12)
+    assert np.any(busy > idle + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# DispatchSimulator: busy-state surface + per-region service identity
+# ---------------------------------------------------------------------------
+
+def test_dispatch_busy_roundtrip_and_validation():
+    sim = DispatchSimulator(4, selector="Fixed",
+                            selector_kw={"algorithm": 1})
+    offsets = np.array([0.0, 1.0, 2.0, 3.0])
+    sim.busy = offsets
+    got = sim.busy
+    assert np.array_equal(got, offsets)
+    got[0] = 99.0  # the property hands out a copy
+    assert sim.busy[0] == 0.0
+    with pytest.raises(ValueError):
+        sim.busy = np.zeros(3)
+
+
+def test_dispatch_busy_state_shifts_wave_makespan():
+    reqs = synthetic_requests(64, seed=1)
+    mk = []
+    for offsets in (np.zeros(4), np.array([0.0, 0.1, 0.2, 0.4])):
+        sim = DispatchSimulator(4, selector="Fixed",
+                                selector_kw={"algorithm": 1}, seed=0)
+        sim.busy = offsets
+        mk.append(sim.run_wave(list(reqs)).makespan)
+    assert mk[1] > mk[0]
+
+
+def test_dispatch_region_names_selection_service_region():
+    sim = DispatchSimulator(2, selector="Fixed",
+                            selector_kw={"algorithm": 0}, region="regionX")
+    sim.run_wave(synthetic_requests(8, seed=0))
+    assert sim.service.regions == ["regionX"]
