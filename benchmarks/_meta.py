@@ -1,0 +1,35 @@
+"""Shared benchmark-record metadata.
+
+Every bench JSON under ``results/`` carries the same ``meta`` block so
+trajectories stay comparable across machines and device topologies — a
+`bench_event_kernel.json` produced on one CPU device is a different
+experiment from one produced on a TPU or under
+``--xla_force_host_platform_device_count=8``, and the record must say so.
+"""
+
+from __future__ import annotations
+
+
+def bench_metadata() -> dict:
+    """Platform + device-count stamp for a bench JSON record."""
+    import jax
+
+    from repro.sim.backends.jax_batched import (resolve_async_dispatch,
+                                                resolve_data_parallel,
+                                                resolve_event_core)
+
+    return {
+        "platform": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "data_parallel": resolve_data_parallel(),
+        "event_core": resolve_event_core(),
+        "async_dispatch": resolve_async_dispatch(),
+        "jax_version": jax.__version__,
+    }
+
+
+def stamp(record: dict) -> dict:
+    """Return a shallow copy of a bench record with the metadata block
+    attached, so writers can ``json.dump(stamp(res), f)`` without the
+    ``meta`` key leaking into dicts the caller still iterates."""
+    return {**record, "meta": bench_metadata()}

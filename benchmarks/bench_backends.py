@@ -21,6 +21,16 @@ import numpy as np
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "results")
 
+def _stamp(record: dict) -> dict:
+    """Platform + device-count metadata (benchmarks/_meta.py) so bench
+    trajectories stay comparable across machines and meshes."""
+    try:
+        from ._meta import stamp
+    except ImportError:          # run as a script, not as benchmarks.*
+        from _meta import stamp
+    return stamp(record)
+
+
 PAIRS = (("mandelbrot", "broadwell"), ("stream", "cascadelake"),
          ("sphynx", "epyc"), ("tc", "epyc"))
 
@@ -85,7 +95,7 @@ def smoke() -> None:
     # artifact CI uploads with if: always() for triage
     os.makedirs(OUT, exist_ok=True)
     with open(os.path.join(OUT, "bench_backends.json"), "w") as f:
-        json.dump(record, f, indent=2)
+        json.dump(_stamp(record), f, indent=2)
     assert not drift, f"python/jax cov drift: {drift}"
     assert agree, "backends disagree on the TC/EPYC Oracle"
     print("smoke: backends agree on the TC/EPYC T=4 Oracle")
@@ -95,7 +105,7 @@ def main() -> list:
     os.makedirs(OUT, exist_ok=True)
     res = run()
     with open(os.path.join(OUT, "bench_backends.json"), "w") as f:
-        json.dump(res, f, indent=2)
+        json.dump(_stamp(res), f, indent=2)
     rows = []
     for pair, r in res.items():
         rows.append((f"backends_{pair.replace('/', '_')}",

@@ -51,6 +51,17 @@ def _lane(alg, cp, N, P, B):
     return profile, system, specs
 
 
+def _write(res: dict) -> None:
+    try:
+        from ._meta import stamp
+    except ImportError:          # run as a script, not as benchmarks.*
+        from _meta import stamp
+
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "bench_event_kernel.json"), "w") as f:
+        json.dump(stamp(res), f, indent=2)
+
+
 def run(lanes=LANES, reps: int = 3) -> dict:
     import jax
 
@@ -64,6 +75,8 @@ def run(lanes=LANES, reps: int = 3) -> dict:
            "interpret": jax.default_backend() != "tpu",
            "lanes": {}}
     for name, alg, cp, N, P, B in lanes:
+        if out["lanes"]:
+            _write(out)          # checkpoint the lanes finished so far
         profile, system, specs = _lane(alg, cp, N, P, B)
         rec = {"alg": alg, "chunk_param": cp, "N": N, "P": P, "B": B}
         results = {}
@@ -108,17 +121,13 @@ def smoke() -> None:
     assert (ww == wp).all(), "what-if wave diverged across event cores"
     print("smoke: what-if wave bit-identical across event cores")
     res["mode"] = "smoke"
-    os.makedirs(OUT, exist_ok=True)
-    with open(os.path.join(OUT, "bench_event_kernel.json"), "w") as f:
-        json.dump(res, f, indent=2)
+    _write(res)
 
 
 def main() -> list:
-    os.makedirs(OUT, exist_ok=True)
     res = run()
     res["mode"] = "full"
-    with open(os.path.join(OUT, "bench_event_kernel.json"), "w") as f:
-        json.dump(res, f, indent=2)
+    _write(res)
     rows = []
     for name, rec in res["lanes"].items():
         rows.append((f"event_kernel_{name}", rec["pallas_s"] * 1e6,

@@ -28,6 +28,16 @@ import time
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "results")
 
+def _stamp(record: dict) -> dict:
+    """Platform + device-count metadata (benchmarks/_meta.py) so bench
+    trajectories stay comparable across machines and meshes."""
+    try:
+        from ._meta import stamp
+    except ImportError:          # run as a script, not as benchmarks.*
+        from _meta import stamp
+    return stamp(record)
+
+
 #: fleet shape: 4 groups x 8 replicas (capacity ~3.4k req/s under the
 #: default ReplicaCostModel)
 N_GROUPS = 4
@@ -79,7 +89,7 @@ def _trace(kind: str, n: int, seed: int = 0, **params):
 def _write(results: dict) -> None:
     os.makedirs(OUT, exist_ok=True)
     with open(os.path.join(OUT, "bench_fleet.json"), "w") as f:
-        json.dump(results, f, indent=2)
+        json.dump(_stamp(results), f, indent=2)
 
 
 def _config(n_headline: int) -> dict:

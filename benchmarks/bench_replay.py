@@ -51,6 +51,10 @@ def run(T: int = 16, seed: int = 0, pairs=PAIRS) -> dict:
 
     out = {}
     for app, sysname in pairs:
+        # checkpoint BEFORE the pair runs: a killed process still leaves
+        # the pairs finished so far (bench_fleet's per-trace convention)
+        if out:
+            _write(out)
         lanes = [CellSpec(app, sysname, sel, mode, reward)
                  for mode in CHUNK_MODES for sel, reward in SELECTOR_GRID]
 
@@ -84,9 +88,14 @@ def run(T: int = 16, seed: int = 0, pairs=PAIRS) -> dict:
 
 
 def _write(res: dict) -> None:
+    try:
+        from ._meta import stamp
+    except ImportError:          # run as a script, not as benchmarks.*
+        from _meta import stamp
+
     os.makedirs(OUT, exist_ok=True)
     with open(os.path.join(OUT, "bench_replay.json"), "w") as f:
-        json.dump(res, f, indent=2)
+        json.dump(stamp(res), f, indent=2)
 
 
 def smoke() -> None:

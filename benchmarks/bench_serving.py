@@ -22,6 +22,16 @@ from repro.serving import DispatchSimulator
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "results")
 
+def _stamp(record: dict) -> dict:
+    """Platform + device-count metadata (benchmarks/_meta.py) so bench
+    trajectories stay comparable across machines and meshes."""
+    try:
+        from ._meta import stamp
+    except ImportError:          # run as a script, not as benchmarks.*
+        from _meta import stamp
+    return stamp(record)
+
+
 SELECTORS = [("RandomSel", None), ("ExhaustiveSel", None),
              ("QLearn", "LT"), ("QLearn", "LIB"),
              ("SARSA", "LT"), ("Hybrid", "LT"), ("Hybrid", "p95")]
@@ -86,7 +96,7 @@ def main() -> list:
     os.makedirs(OUT, exist_ok=True)
     rows = run()
     with open(os.path.join(OUT, "bench_serving.json"), "w") as f:
-        json.dump(_results(rows), f, indent=2)
+        json.dump(_stamp(_results(rows)), f, indent=2)
     with open(os.path.join(OUT, "serving_dispatch.csv"), "w",
               newline="") as f:
         w = csv.writer(f)

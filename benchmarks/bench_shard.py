@@ -1,0 +1,231 @@
+"""Mesh-sharded campaign scaling: per-device-count curves for the three
+batched surfaces the campaign mesh covers — the lockstep selector replay
+(``ReplayBatch``), the fixed-algorithm portfolio sweep (``run_batch``) and
+the fleet what-if pricing (``what_if_routes``) — plus the async
+double-buffered dispatch toggle on the replay loop.
+
+Every device count replays the *same* seeded workload, so besides
+wall-clock the bench asserts **bit-equality** against the single-device
+path: lanes are embarrassingly parallel and ``shard_map`` must not change
+a single campaign statistic (the contract of ``tests/test_shard.py``).
+
+On a real accelerator host the curve is the point of the record; on CPU,
+``--xla_force_host_platform_device_count=8`` carves virtual devices out of
+one physical socket, so *speedup is not expected* — the CI gate
+(``--smoke``) is bit-equality plus no pathological regression, and the JSON
+lands in ``results/bench_shard.json`` with platform + device-count
+metadata so trajectories from different topologies are never conflated.
+
+Run standalone (forces 8 virtual devices on CPU when XLA_FLAGS is unset):
+
+    PYTHONPATH=src python benchmarks/bench_shard.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results")
+
+#: CI no-regression bound: sharded wall-clock over single-device wall-clock
+#: on virtual (same-socket) devices.  Generous because 8 virtual CPU
+#: devices share one thread pool — the gate catches pathological sharding
+#: overhead (resharding, host gathers), not scheduling jitter.
+SMOKE_REGRESSION = 2.0
+#: workloads faster than this single-device are excluded from the ratio
+#: gate: a ~1 ms what-if dispatch is pure fixed resharding overhead on
+#: virtual devices and flips the ratio on scheduler noise alone (they stay
+#: bit-equality gated)
+SMOKE_MIN_SECONDS = 0.05
+
+REPLAY_PAIR = ("tc", "epyc")
+
+
+def _stamp(record: dict) -> dict:
+    try:
+        from ._meta import stamp
+    except ImportError:          # run as a script, not as benchmarks.*
+        from _meta import stamp
+    return stamp(record)
+
+
+def _write(res: dict) -> None:
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "bench_shard.json"), "w") as f:
+        json.dump(_stamp(res), f, indent=2)
+
+
+def _device_counts():
+    import jax
+
+    n = jax.device_count()
+    counts = sorted({d for d in (1, 2, 4, 8, n) if 1 <= d <= n})
+    return n, counts
+
+
+def _replay_workload(bk, T: int, warm: bool = True):
+    from repro.sim import CHUNK_MODES, CellSpec, ReplayBatch, SELECTOR_GRID
+
+    lanes = [CellSpec(*REPLAY_PAIR, sel, mode, reward)
+             for mode in CHUNK_MODES for sel, reward in SELECTOR_GRID]
+    if warm:
+        ReplayBatch(lanes, T=T, seed=0, backend=bk).run()
+    t0 = time.perf_counter()
+    runs = ReplayBatch(lanes, T=T, seed=0, backend=bk).run()
+    dt = time.perf_counter() - t0
+    return dt, [(r.total, r.history) for r in runs]
+
+
+def _portfolio_workload(bk, T: int, reps: int, warm: bool = True):
+    from repro.sim import sweep_portfolio
+
+    if warm:
+        sweep_portfolio("mandelbrot", "broadwell", T=T, reps=reps, backend=bk)
+    t0 = time.perf_counter()
+    sweep = sweep_portfolio("mandelbrot", "broadwell", T=T, reps=reps,
+                            backend=bk)
+    dt = time.perf_counter() - t0
+    key = sorted(sweep.runs, key=str)
+    return dt, [sweep.runs[k].times for k in key]
+
+
+def _routes_workload(bk, n_req: int, warm: bool = True):
+    rng = np.random.default_rng(11)
+    prefixes = [np.concatenate([[0.0],
+                                np.cumsum(rng.random(n_req + 13 * i) * 1e-3)])
+                for i in range(4)]
+    avails = [rng.random(8) * 1e-3 for _ in range(4)]
+    cands = [(s, a, cp) for s in range(4) for a in (0, 2, 4, 6)
+             for cp in (0, 16)]
+    if warm:
+        bk.what_if_routes(prefixes, 8, avails, 2e-4, 1e-3, cands)
+    t0 = time.perf_counter()
+    prices = bk.what_if_routes(prefixes, 8, avails, 2e-4, 1e-3, cands)
+    dt = time.perf_counter() - t0
+    return dt, prices
+
+
+def _equal(a, b) -> bool:
+    if isinstance(a, np.ndarray):
+        return bool(np.array_equal(a, b))
+    if isinstance(a, (list, tuple)):
+        return len(a) == len(b) and all(_equal(x, y) for x, y in zip(a, b))
+    return a == b
+
+
+def run(T: int = 8, reps: int = 3, n_req: int = 4096) -> dict:
+    import jax
+
+    from repro.sim.backends.jax_batched import JaxBatchedBackend
+
+    n, counts = _device_counts()
+    out = {"device_counts": counts, "T": T,
+           "platform": jax.default_backend(), "workloads": {}}
+    workloads = {
+        "lockstep_replay": lambda bk: _replay_workload(bk, T),
+        "portfolio_sweep": lambda bk: _portfolio_workload(bk, T, reps),
+        "what_if_routes": lambda bk: _routes_workload(bk, n_req),
+    }
+    for name, fn in workloads.items():
+        rec = {}
+        ref = None
+        for d in counts:
+            bk = JaxBatchedBackend(data_parallel=d)
+            dt, result = fn(bk)
+            if ref is None:
+                ref = result
+                rec["d1_s"] = round(dt, 4)
+            rec.setdefault("seconds", {})[str(d)] = round(dt, 4)
+            rec.setdefault("bitexact", {})[str(d)] = _equal(result, ref)
+            assert rec["bitexact"][str(d)], \
+                f"{name} diverged from single-device at data_parallel={d}"
+        base = rec["seconds"][str(counts[0])]
+        rec["scaling"] = {k: round(base / max(v, 1e-9), 2)
+                          for k, v in rec["seconds"].items()}
+        out["workloads"][name] = rec
+        _write(out)              # checkpoint after every workload
+    # async double-buffered dispatch on the lockstep replay loop, widest mesh
+    sync_bk = JaxBatchedBackend(data_parallel=n, async_dispatch=False)
+    async_bk = JaxBatchedBackend(data_parallel=n, async_dispatch=True)
+    dt_sync, r_sync = _replay_workload(sync_bk, T)
+    dt_async, r_async = _replay_workload(async_bk, T)
+    assert _equal(r_sync, r_async), "async dispatch changed replay results"
+    out["async_dispatch"] = {"devices": n, "sync_s": round(dt_sync, 4),
+                             "async_s": round(dt_async, 4),
+                             "speedup": round(dt_sync / max(dt_async, 1e-9),
+                                              2)}
+    _write(out)
+    return out
+
+
+def smoke() -> None:
+    """CI gate (forced-8-virtual-device lane): every sharded surface must be
+    bit-equal to the single-device path, and the widest mesh must not
+    regress wall-clock beyond ``SMOKE_REGRESSION`` x single-device (virtual
+    CPU devices share the socket, so *speedup* is not gated — scaling
+    curves are the record, equality is the contract)."""
+    res = run(T=4, reps=2, n_req=1024)
+    res["mode"] = "smoke"
+    _write(res)
+    worst = 0.0
+    for name, rec in res["workloads"].items():
+        assert all(rec["bitexact"].values()), f"{name} not bit-equal"
+        widest = str(res["device_counts"][-1])
+        ratio = rec["seconds"][widest] / max(rec["seconds"]["1"], 1e-9)
+        gated = rec["seconds"]["1"] >= SMOKE_MIN_SECONDS
+        if gated:
+            worst = max(worst, ratio)
+        print(f"smoke shard {name}: d1={rec['seconds']['1']}s "
+              f"d{widest}={rec['seconds'][widest]}s "
+              f"ratio={ratio:.2f} gated={gated} bitexact=True")
+    ad = res["async_dispatch"]
+    print(f"smoke shard async_dispatch: sync={ad['sync_s']}s "
+          f"async={ad['async_s']}s speedup={ad['speedup']}x")
+    if len(res["device_counts"]) > 1:
+        assert worst <= SMOKE_REGRESSION, \
+            (f"sharded path regressed {worst:.2f}x > "
+             f"{SMOKE_REGRESSION}x vs single device")
+        print(f"smoke: sharded bit-equal, worst ratio {worst:.2f}x <= "
+              f"{SMOKE_REGRESSION}x")
+    else:
+        print("smoke: single device only — bit-equality/async gates ran, "
+              "scaling skipped")
+
+
+def main() -> list:
+    res = run()
+    res["mode"] = "full"
+    _write(res)
+    rows = []
+    for name, rec in res["workloads"].items():
+        widest = str(res["device_counts"][-1])
+        rows.append((f"shard_{name}", rec["seconds"][widest] * 1e6,
+                     f"devices={widest},scale={rec['scaling'][widest]}x,"
+                     f"bitexact={all(rec['bitexact'].values())}"))
+    ad = res["async_dispatch"]
+    rows.append(("shard_async_dispatch", ad["async_s"] * 1e6,
+                 f"speedup={ad['speedup']}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    # must precede the first jax import: virtual devices only form at boot
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for row in main():
+            print(f"{row[0]},{row[1]:.3f},{row[2]}")

@@ -22,6 +22,16 @@ import numpy as np
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "results")
 
+def _stamp(record: dict) -> dict:
+    """Platform + device-count metadata (benchmarks/_meta.py) so bench
+    trajectories stay comparable across machines and meshes."""
+    try:
+        from ._meta import stamp
+    except ImportError:          # run as a script, not as benchmarks.*
+        from _meta import stamp
+    return stamp(record)
+
+
 PAIRS = (("tc", "epyc"), ("mandelbrot", "broadwell"))
 
 SELECTORS = [("RandomSel", None), ("ExpertSel", None), ("QLearn", "LT"),
@@ -108,7 +118,7 @@ def main() -> list:
     res = run()
     res["decision_latency_us"] = decision_latency()
     with open(os.path.join(OUT, "bench_simpolicy.json"), "w") as f:
-        json.dump(res, f, indent=2)
+        json.dump(_stamp(res), f, indent=2)
     rows = []
     for pair, r in res.items():
         if pair == "decision_latency_us":

@@ -17,6 +17,7 @@ Benches:
     event_kernel §Backends   while_loop vs fused Pallas event core
     simpolicy    §SimAS      simulation-assisted selection regret + latency
     fleet        §Fleet      trace-driven routing over replica groups
+    shard        §Mesh       per-device-count scaling of the sharded lanes
 
 ``--smoke`` is the single CI entry point: it runs every registered smoke
 gate for the requested tier and ALWAYS writes ``results/smoke_summary.json``
@@ -47,6 +48,10 @@ SMOKE_GATES = {
     "fleet": ("bench_fleet", ("tier1", "slow")),
     "replay": ("bench_replay", "slow"),
     "event_kernel": ("bench_event_kernel", "slow"),
+    # its CI job boots with XLA_FLAGS=--xla_force_host_platform_device_count=8
+    # so the mesh has lanes to shard over; sized to available devices
+    # otherwise (bit-equality still gated on one device)
+    "shard": ("bench_shard", "shard"),
 }
 
 
@@ -107,7 +112,8 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="run the registered CI smoke gates and write "
                          "results/smoke_summary.json")
-    ap.add_argument("--tier", default="all", choices=["tier1", "slow", "all"],
+    ap.add_argument("--tier", default="all",
+                    choices=["tier1", "slow", "shard", "all"],
                     help="which smoke gates to run (with --smoke)")
     args = ap.parse_args()
 
@@ -117,7 +123,7 @@ def main() -> None:
     from . import (bench_anova, bench_autotune, bench_backends, bench_chunks,
                    bench_cov, bench_degradation, bench_event_kernel,
                    bench_fleet, bench_replay, bench_roofline, bench_serving,
-                   bench_simpolicy, bench_traces)
+                   bench_shard, bench_simpolicy, bench_traces)
     benches = {
         "chunks": bench_chunks.main,
         "cov": bench_cov.main,
@@ -132,6 +138,7 @@ def main() -> None:
         "event_kernel": bench_event_kernel.main,
         "simpolicy": bench_simpolicy.main,
         "fleet": bench_fleet.main,
+        "shard": bench_shard.main,
     }
     if args.only:
         benches = {args.only: benches[args.only]}

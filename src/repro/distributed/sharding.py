@@ -32,6 +32,32 @@ def data_axes(mesh: Mesh):
     return tuple(a for a in ("pod", "data") if a in names)
 
 
+def lane_spec(mesh: Mesh) -> P:
+    """Leading-axis lane sharding for campaign batches: instances / what-if
+    candidate rows shard over the composed data axes, everything trailing
+    (schedule slots, PEs) stays local to the lane's device."""
+    dp = data_axes(mesh)
+    return P(dp if len(dp) > 1 else (dp[0] if dp else None))
+
+
+def lane_count(mesh: Mesh) -> int:
+    """Extent of the composed data axes — the number of lane shards."""
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def pad_lanes(n: int, mesh: Mesh) -> int:
+    """Round a lane count up to a multiple of the mesh's data extent so the
+    leading axis divides evenly under ``shard_map``.  Padding lanes carry
+    ``count == 0`` schedules (the event cores never execute them) and are
+    sliced off host-side — bit-equality to the unsharded path is preserved
+    by construction."""
+    d = lane_count(mesh)
+    return -(-n // d) * d
+
+
 def _axis_size(mesh: Mesh, entry) -> int:
     if entry is None:
         return 1

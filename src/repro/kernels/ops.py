@@ -20,6 +20,19 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def preferred_event_core() -> str:
+    """Platform default for the batched engine's sequential event core.
+
+    On accelerators the Pallas kernels compile (Mosaic on TPU) and the fused
+    event loop lifts the per-iteration dispatch XLA leaves on the table; on
+    CPU they only *interpret* (a correctness vehicle, 0.2–1.1x of the
+    while-loop core per ``results/bench_event_kernel.json``), so the vmapped
+    ``lax.while_loop`` reference stays the default there.  Kept here so the
+    interpret-vs-compile platform policy lives in one module.
+    """
+    return "while_loop" if _interpret() else "pallas"
+
+
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
                     block_kv: int = 512):
     return _flash(q, k, v, causal=causal, block_q=block_q, block_kv=block_kv,

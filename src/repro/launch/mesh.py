@@ -7,7 +7,10 @@ CPU device while the dry-run subprocess sees 512 placeholder devices.
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,9 +20,39 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(model_parallel: int = 1):
-    """Whatever fits the local devices — used by tests and examples."""
-    n = len(jax.devices())
-    assert n % model_parallel == 0
-    return jax.make_mesh((n // model_parallel, model_parallel),
-                         ("data", "model"))
+def make_host_mesh(model_parallel: int = 1,
+                   data_parallel: Optional[int] = None):
+    """Whatever fits the local devices — used by tests, examples and the
+    campaign lane sharding.
+
+    ``data_parallel`` clamps the data axis so callers can request fewer
+    lanes than the host exposes (a campaign slice smaller than the device
+    count, or a controlled scaling sweep over 1/2/4/8 devices); the mesh
+    then covers the first ``data_parallel * model_parallel`` devices.
+    """
+    devices = jax.devices()
+    n = len(devices)
+    if model_parallel < 1:
+        raise ValueError(f"model_parallel must be >= 1, got {model_parallel}")
+    if n % model_parallel != 0:
+        raise ValueError(
+            f"device count {n} is not divisible by "
+            f"model_parallel={model_parallel}; pick a divisor of {n}")
+    dp = n // model_parallel
+    if data_parallel is not None:
+        if data_parallel < 1:
+            raise ValueError(
+                f"data_parallel must be >= 1, got {data_parallel}")
+        dp = min(dp, data_parallel)
+    use = devices[: dp * model_parallel]
+    return jax.sharding.Mesh(
+        np.asarray(use, dtype=object).reshape(dp, model_parallel),
+        ("data", "model"))
+
+
+def campaign_mesh(data_parallel: Optional[int] = None):
+    """1-D-data host mesh for campaign lane sharding: every batched lane
+    dimension (``run_batch`` / ``run_lockstep`` instances, what-if candidate
+    rows) shards over ``data``; ``model`` stays 1 — the event cores are
+    per-lane sequential and never split a lane across devices."""
+    return make_host_mesh(model_parallel=1, data_parallel=data_parallel)

@@ -12,7 +12,10 @@ it builds a small set of candidate *partitions* of the wave, prices every
 (replica-group, algorithm, chunk) assignment of every partition through ONE
 batched ``what_if_routes`` call (SimAS-style consultation, on the JAX
 backend a single jitted ``_route_eval``), and commits to the partition with
-the lowest predicted fleet completion.
+the lowest predicted fleet completion.  On a multi-device host that pricing
+call shards its candidate axis over the backend's campaign mesh
+(``REPRO_DATA_PARALLEL``) — candidates are padded to the mesh extent with
+empty lanes, so the prices are bit-identical to single-device.
 """
 
 from __future__ import annotations

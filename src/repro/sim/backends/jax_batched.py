@@ -28,6 +28,19 @@ rep x time-step) — at once:
     ``run_batch``, ``run_lockstep`` and ``what_if_wave`` all route through
     the selected core.
 
+4.  On a multi-device host every batched lane dimension — ``run_batch`` /
+    ``run_lockstep`` instances and the serving what-if candidate rows —
+    executes under ``jax.shard_map`` over the campaign mesh's ``data``
+    axis (``launch.mesh.campaign_mesh`` + ``distributed.sharding`` lane
+    specs): lanes are embarrassingly parallel, so each device runs the
+    identical per-lane computation on its shard and the results are
+    bit-identical to the single-device path (lane counts are padded to the
+    mesh extent and masked with ``count == 0``; ``tests/test_shard.py``).
+    ``data_parallel=`` / ``REPRO_DATA_PARALLEL`` clamp the mesh.  The host
+    side is double-buffered (``async_dispatch=`` / ``REPRO_ASYNC_DISPATCH``):
+    ragged-to-padded packing of dispatch t+1 overlaps the device executing
+    dispatch t.
+
 STATIC and over-``EVENT_CAP`` SS/StaticSteal instances are delegated to the
 reference closed forms with the *same* numpy rng streams, so those results
 are bit-identical to the Python backend.  Event-loop instances draw their
@@ -59,8 +72,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as Pspec
 
 from ...core.jaxsched import chunk_schedule, staticsteal_schedule
+from ...distributed.sharding import lane_count, lane_spec, pad_lanes
+from ...launch.mesh import campaign_mesh
 from ..workloads import profile_digest as _profile_digest
 from ..workloads import stack_prefix_grids
 from .base import (EVENT_CAP, BatchResult, InstanceSpec, LockstepRequest,
@@ -77,6 +94,12 @@ _MAX_ELEMS = 1 << 22
 #: env var naming the default sequential event core
 EVENT_CORE_ENV = "REPRO_EVENT_CORE"
 EVENT_CORES = ("while_loop", "pallas")
+#: env var clamping the campaign mesh's data axis (lanes shard over it);
+#: unset means "all local devices", 1 disables sharding entirely
+DATA_PARALLEL_ENV = "REPRO_DATA_PARALLEL"
+#: env var toggling double-buffered async dispatch ("0" restores the
+#: synchronous pack -> dispatch -> drain loop)
+ASYNC_DISPATCH_ENV = "REPRO_ASYNC_DISPATCH"
 
 
 def _next_bucket(n: int) -> int:
@@ -103,17 +126,43 @@ def _pallas_available() -> bool:
 
 def resolve_event_core(kernel: Optional[str] = None) -> str:
     """Resolve the sequential event core: explicit ``kernel=`` argument,
-    else ``REPRO_EVENT_CORE``, else the while-loop reference.  Falls back
+    else ``REPRO_EVENT_CORE``, else the platform default (``"auto"``):
+    the Mosaic-compiled Pallas kernel on accelerator platforms, the vmapped
+    ``lax.while_loop`` reference on CPU, where Pallas only interprets (the
+    policy lives in ``kernels.ops.preferred_event_core``).  Falls back
     (with a warning) when Pallas is unavailable in this jax build."""
-    name = (kernel or os.environ.get(EVENT_CORE_ENV) or "while_loop").lower()
+    name = (kernel or os.environ.get(EVENT_CORE_ENV) or "auto").lower()
+    if name == "auto":
+        if not _pallas_available():     # pragma: no cover - exotic builds
+            return "while_loop"
+        from ...kernels.ops import preferred_event_core
+        return preferred_event_core()
     if name not in EVENT_CORES:
         raise ValueError(f"unknown event core {name!r}; "
-                         f"available: {list(EVENT_CORES)}")
+                         f"available: ['auto', *{list(EVENT_CORES)}]")
     if name == "pallas" and not _pallas_available():
         warnings.warn("Pallas unavailable; falling back to the "
                       "while_loop event core", RuntimeWarning)
         name = "while_loop"
     return name
+
+
+def resolve_data_parallel(data_parallel: Optional[int] = None) -> int:
+    """Resolve the campaign mesh's data extent: explicit argument, else
+    ``REPRO_DATA_PARALLEL``, else every local device.  Always clamped to
+    the local device count (``make_host_mesh`` clamps again on its side)."""
+    if data_parallel is None:
+        env = os.environ.get(DATA_PARALLEL_ENV)
+        data_parallel = int(env) if env else len(jax.devices())
+    if data_parallel < 1:
+        raise ValueError(f"data_parallel must be >= 1, got {data_parallel}")
+    return min(data_parallel, len(jax.devices()))
+
+
+def resolve_async_dispatch(async_dispatch: Optional[bool] = None) -> bool:
+    if async_dispatch is None:
+        return os.environ.get(ASYNC_DISPATCH_ENV, "1") != "0"
+    return bool(async_dispatch)
 
 
 class _LRU:
@@ -271,6 +320,52 @@ _route_eval = jax.jit(_route_eval_impl, static_argnums=(0, 1))
 
 
 # ---------------------------------------------------------------------------
+# mesh-sharded cores
+# ---------------------------------------------------------------------------
+#
+# Lanes are embarrassingly parallel over the leading batch axis, so every
+# jitted core also exists shard_map'd over the campaign mesh's ``data``
+# axis: each device runs the identical per-lane computation on its B/ndev
+# shard, no collectives anywhere, and per-lane arithmetic (including the
+# counter-based noise draws folded from per-lane seeds) is untouched — the
+# sharded results are bit-identical to the single-device path by
+# construction.  Callers pad the lane axis to a multiple of the mesh's data
+# extent with ``count == 0`` rows and slice the padding off host-side.
+# Builders are cached per (mesh, statics) so each compiled executable is
+# reused across dispatches exactly like the unsharded jits.
+
+@functools.lru_cache(maxsize=32)
+def _sharded_events(mesh, P: int, core: str):
+    lane, rep = lane_spec(mesh), Pspec()
+    fn = shard_map(functools.partial(_batched_events_impl, P, core),
+                   mesh=mesh,
+                   in_specs=(rep,) + (lane,) * 10 + (rep,) * 3,
+                   out_specs=(lane, lane, lane),
+                   check_rep=False)   # no replicated outputs, no collectives
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_wave(mesh, R: int, core: str):
+    lane, rep = lane_spec(mesh), Pspec()
+    fn = shard_map(functools.partial(_wave_eval_impl, R, core),
+                   mesh=mesh,
+                   in_specs=(lane, lane, lane, rep, rep),
+                   out_specs=lane, check_rep=False)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_route(mesh, R: int, core: str):
+    lane, rep = lane_spec(mesh), Pspec()
+    fn = shard_map(functools.partial(_route_eval_impl, R, core),
+                   mesh=mesh,
+                   in_specs=(lane, lane, lane, lane, rep),
+                   out_specs=lane, check_rep=False)
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
 # backend
 # ---------------------------------------------------------------------------
 
@@ -278,22 +373,67 @@ class JaxBatchedBackend(SimBackend):
     """Campaign-scale batched engine (see module docstring).
 
     ``kernel`` selects the sequential event core (``"while_loop"`` /
-    ``"pallas"``); ``None`` resolves ``REPRO_EVENT_CORE`` at construction
-    time (backends are process-wide singletons).
+    ``"pallas"`` / ``"auto"``); ``None`` resolves ``REPRO_EVENT_CORE`` at
+    construction time (backends are process-wide singletons).
+
+    ``data_parallel`` sets the campaign mesh's data extent (``None``
+    resolves ``REPRO_DATA_PARALLEL``, defaulting to every local device):
+    with more than one device the batched lane dimension of every core —
+    ``run_batch`` / ``run_lockstep`` instances and what-if candidate rows —
+    executes under ``shard_map``, bit-identical to the single-device path
+    (lanes padded to the mesh extent, padding masked by ``count == 0``).
+
+    ``async_dispatch`` (``None`` resolves ``REPRO_ASYNC_DISPATCH``, default
+    on) double-buffers the host side: the ragged-to-padded packing of batch
+    t+1 overlaps the device executing batch t.
     """
 
     name = "jax"
 
-    def __init__(self, kernel: Optional[str] = None):
+    def __init__(self, kernel: Optional[str] = None,
+                 data_parallel: Optional[int] = None,
+                 async_dispatch: Optional[bool] = None):
         self.event_core = resolve_event_core(kernel)
         if self.event_core != "while_loop":
             self.name = f"jax-{self.event_core}"
+        self.data_parallel = resolve_data_parallel(data_parallel)
+        self.mesh = (campaign_mesh(self.data_parallel)
+                     if self.data_parallel > 1 else None)
+        self.async_dispatch = resolve_async_dispatch(async_dispatch)
         # (alg, N, P, cp) -> sizes ndarray, for central-queue algorithms
         self._sched_cache = _LRU(512)
         # StaticSteal replays keyed additionally by the cost/locality params
         self._steal_cache = _LRU(128)
         # profile-stack digest -> padded device-resident (Sp, G+1) grids
         self._grids_cache = _LRU(4)
+
+    # ---- mesh dispatch -----------------------------------------------------
+
+    @property
+    def _shards(self) -> int:
+        return 1 if self.mesh is None else lane_count(self.mesh)
+
+    def _pad_rows(self, n: int) -> int:
+        """Lane-axis padding: the power-of-two row bucket (compile-cache
+        friendly), rounded up to a multiple of the mesh's data extent so
+        ``shard_map`` splits it evenly."""
+        rows = _pow2_rows(n)
+        return pad_lanes(rows, self.mesh) if self.mesh is not None else rows
+
+    def _events_call(self, P: int, *args):
+        if self.mesh is None:
+            return _batched_events(P, self.event_core, *args)
+        return _sharded_events(self.mesh, P, self.event_core)(*args)
+
+    def _wave_call(self, R: int, *args):
+        if self.mesh is None:
+            return _wave_eval(R, self.event_core, *args)
+        return _sharded_wave(self.mesh, R, self.event_core)(*args)
+
+    def _route_call(self, R: int, *args):
+        if self.mesh is None:
+            return _route_eval(R, self.event_core, *args)
+        return _sharded_route(self.mesh, R, self.event_core)(*args)
 
     # ---- schedule precompute ---------------------------------------------
 
@@ -446,49 +586,76 @@ class JaxBatchedBackend(SimBackend):
         for i, c in enumerate(counts):
             by_bucket.setdefault(_next_bucket(int(c)), []).append(i)
 
-        for K, ids in sorted(by_bucket.items()):
-            max_rows = max(8, _MAX_ELEMS // K)
-            for off in range(0, len(ids), max_rows):
-                sub = np.asarray(ids[off:off + max_rows])
-                n = len(sub)
-                Bp = _pow2_rows(n)
-                # ragged-to-padded assembly: one boolean scatter per field
-                # instead of the old per-row element-wise packing loop
-                lens = counts[sub]
-                mask = np.arange(K, dtype=np.int32)[None, :] < lens[:, None]
-                starts = np.zeros((Bp, K), np.int32)
-                sizes = np.zeros((Bp, K), np.int32)
-                loc = np.zeros((Bp, K), np.float32)
-                forced = np.full((Bp, K), -1, np.int32)
-                starts[:n][mask] = np.concatenate([rows[i][0] for i in sub])
-                sizes[:n][mask] = np.concatenate([rows[i][1] for i in sub])
-                loc[:n][mask] = np.concatenate([rows[i][2] for i in sub])
-                forced[:n][mask] = np.concatenate(
-                    [rows[i][3] if rows[i][3] is not None
-                     else np.full(lens[j], -1, np.int32)
-                     for j, i in enumerate(sub)])
-                gid = np.zeros(Bp, np.int32)
-                inv_n = np.ones(Bp, np.float32)
-                cnt = np.zeros(Bp, np.int32)
-                seeds = np.zeros(Bp, np.uint32)
-                h_eff = np.zeros(Bp, np.float32)
-                bcost = np.zeros(Bp, np.float32)
-                gid[:n] = gid_all[sub]
-                inv_n[:n] = inv_all[sub]
-                cnt[:n] = lens
-                seeds[:n] = seed_all[sub]
-                h_eff[:n] = h_all[sub]
-                bcost[:n] = bc_all[sub]
-                m, l, f = _batched_events(
-                    P, self.event_core, grids_dev, jnp.asarray(gid),
-                    jnp.asarray(inv_n), jnp.asarray(starts),
-                    jnp.asarray(sizes), jnp.asarray(loc), jnp.asarray(cnt),
-                    jnp.asarray(forced), jnp.asarray(seeds),
-                    jnp.asarray(h_eff), jnp.asarray(bcost),
-                    np.float32(system.noise_sigma),
-                    np.float32(system.jitter), np.float32(system.speed_spread))
-                m, l, f = np.asarray(m), np.asarray(l), np.asarray(f)
-                mk[sub], lb[sub], fin[sub] = m[:n], l[:n], f[:n]
+        def packed():
+            """Host-side ragged-to-padded assembly, one yielded batch per
+            dispatch.  A generator so the async loop below interleaves the
+            packing of batch t+1 with the device executing batch t."""
+            for K, ids in sorted(by_bucket.items()):
+                # per-device row budget: a mesh holds shards x _MAX_ELEMS
+                max_rows = max(8, (_MAX_ELEMS // K) * self._shards)
+                for off in range(0, len(ids), max_rows):
+                    sub = np.asarray(ids[off:off + max_rows])
+                    n = len(sub)
+                    Bp = self._pad_rows(n)
+                    # ragged-to-padded assembly: one boolean scatter per
+                    # field instead of per-row element-wise packing loops
+                    lens = counts[sub]
+                    mask = (np.arange(K, dtype=np.int32)[None, :]
+                            < lens[:, None])
+                    starts = np.zeros((Bp, K), np.int32)
+                    sizes = np.zeros((Bp, K), np.int32)
+                    loc = np.zeros((Bp, K), np.float32)
+                    forced = np.full((Bp, K), -1, np.int32)
+                    starts[:n][mask] = np.concatenate(
+                        [rows[i][0] for i in sub])
+                    sizes[:n][mask] = np.concatenate(
+                        [rows[i][1] for i in sub])
+                    loc[:n][mask] = np.concatenate([rows[i][2] for i in sub])
+                    forced[:n][mask] = np.concatenate(
+                        [rows[i][3] if rows[i][3] is not None
+                         else np.full(lens[j], -1, np.int32)
+                         for j, i in enumerate(sub)])
+                    gid = np.zeros(Bp, np.int32)
+                    inv_n = np.ones(Bp, np.float32)
+                    cnt = np.zeros(Bp, np.int32)
+                    seeds = np.zeros(Bp, np.uint32)
+                    h_eff = np.zeros(Bp, np.float32)
+                    bcost = np.zeros(Bp, np.float32)
+                    gid[:n] = gid_all[sub]
+                    inv_n[:n] = inv_all[sub]
+                    cnt[:n] = lens
+                    seeds[:n] = seed_all[sub]
+                    h_eff[:n] = h_all[sub]
+                    bcost[:n] = bc_all[sub]
+                    yield sub, (gid, inv_n, starts, sizes, loc, cnt, forced,
+                                seeds, h_eff, bcost)
+
+        def drain(sub, res):
+            n = len(sub)
+            m, l, f = (np.asarray(x) for x in res)
+            mk[sub], lb[sub], fin[sub] = m[:n], l[:n], f[:n]
+
+        # double-buffered async dispatch: jax dispatch is asynchronous, so
+        # holding exactly one in-flight batch lets the packing of batch t+1
+        # (numpy, host) overlap the device executing batch t; draining after
+        # the NEXT dispatch keeps one buffer's latency hidden.  Buffers are
+        # donation-safe by construction: each dispatch packs fresh host
+        # arrays, nothing aliases an in-flight device buffer (donation
+        # itself stays rejected — see the note above the jitted cores).
+        pending = None
+        for sub, lanes in packed():
+            res = self._events_call(
+                P, grids_dev, *lanes,
+                np.float32(system.noise_sigma), np.float32(system.jitter),
+                np.float32(system.speed_spread))
+            if not self.async_dispatch:
+                drain(sub, res)
+                continue
+            if pending is not None:
+                drain(*pending)
+            pending = (sub, res)
+        if pending is not None:
+            drain(*pending)
         return mk, lb, fin, counts
 
     def run_lockstep(self, profiles: Sequence, system,
@@ -591,20 +758,21 @@ class JaxBatchedBackend(SimBackend):
             # what-ifs with drifting wave sizes never recompile _wave_eval.
             K = _pow2_rows(max(len(b[2]) for b in batched))
             A = len(batched)
-            eff = np.zeros((A, K), np.float32)
-            forced = np.full((A, K), -1, np.int32)
-            cnt = np.zeros(A, np.int32)
+            # candidate rows shard over the mesh's data axis: pad to its
+            # extent with count==0 rows (masked, sliced off below)
+            Ap = pad_lanes(A, self.mesh) if self.mesh is not None else A
+            eff = np.zeros((Ap, K), np.float32)
+            forced = np.full((Ap, K), -1, np.int32)
+            cnt = np.zeros(Ap, np.int32)
             for j, (_, st, sz, pes) in enumerate(batched):
                 n = len(sz)
                 eff[j, :n] = prefix[st + sz] - prefix[st]
                 cnt[j] = n
                 if pes is not None:
                     forced[j, :n] = pes
-            mks = np.asarray(_wave_eval(
-                R, self.event_core, jnp.asarray(eff), jnp.asarray(cnt),
-                jnp.asarray(forced),
-                jnp.asarray(np.asarray(init_avail), jnp.float32),
-                np.float32(h + fixed)))
+            mks = np.asarray(self._wave_call(
+                R, eff, cnt, forced,
+                np.asarray(init_avail, np.float32), np.float32(h + fixed)))
             for j, (k, *_rest) in enumerate(batched):
                 out[k] = mks[j]
         return out
@@ -657,10 +825,11 @@ class JaxBatchedBackend(SimBackend):
         if batched:
             K = _pow2_rows(max(len(b[3]) for b in batched))
             A = len(batched)
-            eff = np.zeros((A, K), np.float32)
-            forced = np.full((A, K), -1, np.int32)
-            cnt = np.zeros(A, np.int32)
-            av = np.zeros((A, R), np.float32)
+            Ap = pad_lanes(A, self.mesh) if self.mesh is not None else A
+            eff = np.zeros((Ap, K), np.float32)
+            forced = np.full((Ap, K), -1, np.int32)
+            cnt = np.zeros(Ap, np.int32)
+            av = np.zeros((Ap, R), np.float32)
             for j, (_, slot, st, sz, pes) in enumerate(batched):
                 n = len(sz)
                 prefix = prefixes[slot]
@@ -669,10 +838,8 @@ class JaxBatchedBackend(SimBackend):
                 av[j] = avails[slot]
                 if pes is not None:
                     forced[j, :n] = pes
-            mks = np.asarray(_route_eval(
-                R, self.event_core, jnp.asarray(eff), jnp.asarray(cnt),
-                jnp.asarray(forced), jnp.asarray(av),
-                np.float32(h + fixed)))
+            mks = np.asarray(self._route_call(
+                R, eff, cnt, forced, av, np.float32(h + fixed)))
             for j, (i, *_rest) in enumerate(batched):
                 out[i] = mks[j]
         return out

@@ -14,6 +14,14 @@ Two batched layers put the whole campaign on the active ``SimBackend``:
   *lockstep across cells* through :class:`ReplayBatch`: a per-step
   decide / execute / learn cycle where every lane's loop execution for step
   ``t`` is one ``run_lockstep`` call per machine model.
+
+On a multi-device host the JAX backend shards the lane axis of both layers
+over the ``data`` axis of a host mesh and double-buffers host packing
+against device compute (``data_parallel=`` / ``REPRO_DATA_PARALLEL``,
+``async_dispatch=`` / ``REPRO_ASYNC_DISPATCH`` on
+:class:`~repro.sim.backends.jax_batched.JaxBatchedBackend`) —
+bit-identical to the single-device path, so nothing in this module
+changes: campaign lanes scale out through the backend alone.
 """
 
 from __future__ import annotations

@@ -1,0 +1,129 @@
+"""Sharded-vs-single-device bit-equality checks, run in a subprocess.
+
+``tests/test_shard.py`` (and the ``bench_shard`` smoke lane) execute this
+script under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; the
+script also forces the flag itself when unset, so it can only run as a
+fresh process (jax reads XLA_FLAGS once at import).  Everything here must
+be *bit*-equal — lanes are embarrassingly parallel, so putting them under
+``shard_map`` (including padding to non-divisible mesh extents) must not
+change a single ulp of any campaign statistic.
+
+Prints ``SHARD-OK`` and exits 0 on success.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+
+def _policy_states(run):
+    out = {}
+    for nm in run.history:
+        policy = run.service.policy(nm)
+        state = policy.state_dict()
+        if state is None:
+            expert = getattr(policy, "_expert", policy)
+            state = {"current": getattr(expert, "current", None)}
+        out[nm] = state
+    return out
+
+
+def check_run_batch(backends) -> None:
+    """Portfolio sweep (run_batch fan-out) across mesh extents."""
+    from repro.sim import sweep_portfolio
+
+    ref = None
+    for label, bk in backends:
+        sweep = sweep_portfolio("sphynx", "epyc", T=3, reps=2, backend=bk)
+        if ref is None:
+            ref = sweep
+            continue
+        for key in ref.runs:
+            assert (sweep.runs[key].times == ref.runs[key].times).all() \
+                and (sweep.runs[key].libs == ref.runs[key].libs).all(), \
+                (label, key)
+    print("run_batch: bit-equal across", [l for l, _ in backends])
+
+
+def check_lockstep(backends) -> None:
+    """Lockstep selector replays: totals, selection traces AND per-loop
+    policy state (Q-tables) must be identical across mesh extents."""
+    from repro.sim import CellSpec, ReplayBatch
+
+    lanes = [CellSpec("tc", "epyc", sel, mode, reward)
+             for mode in ("default", "expChunk")
+             for sel, reward in (("RandomSel", None), ("ExhaustiveSel", None),
+                                 ("ExpertSel", None), ("QLearn", "LT"),
+                                 ("QLearn", "LIB"), ("SARSA", "LIB"),
+                                 ("Hybrid", "LT"))]
+    ref = None
+    for label, bk in backends:
+        runs = ReplayBatch(lanes, T=4, seed=0, backend=bk).run()
+        if ref is None:
+            ref = runs
+            continue
+        for run, rf, spec in zip(runs, ref, lanes):
+            assert run.total == rf.total, (label, spec)
+            assert run.history == rf.history, (label, spec)
+            assert _policy_states(run) == _policy_states(rf), (label, spec)
+    print("lockstep replay: Q-tables/traces bit-equal across",
+          [l for l, _ in backends], f"({len(lanes)} lanes)")
+
+
+def check_what_if(backends) -> None:
+    """Serving what-if pricing: wave and fleet-route candidate rows,
+    including candidate counts that do NOT divide the mesh extent."""
+    rng = np.random.default_rng(7)
+    prefixes = [np.concatenate([[0.0], np.cumsum(rng.random(96 + 31 * i)
+                                                 * 1e-3)])
+                for i in range(3)]
+    avails = [rng.random(8) * 1e-3 for _ in range(3)]
+    # 3 slots x 4 algs - 1 = 11 rows: indivisible by 8, 4 and 3 alike
+    cands = [(s, a, cp) for s in range(3) for a, cp in
+             ((0, 0), (2, 0), (4, 8), (6, 0))][:-1]
+    ref_r = ref_w = None
+    for label, bk in backends:
+        routes = bk.what_if_routes(prefixes, 8, avails, 2e-4, 1e-3, cands)
+        wave = bk.what_if_wave(prefixes[0], 8, avails[0], 2e-4, 1e-3,
+                               list(range(12)))
+        if ref_r is None:
+            ref_r, ref_w = routes, wave
+            continue
+        assert (routes == ref_r).all(), (label, "routes")
+        assert (wave == ref_w).all(), (label, "wave")
+    print(f"what_if_routes/wave: {len(cands)}-candidate prices bit-equal "
+          "across", [l for l, _ in backends])
+
+
+def main() -> None:
+    import jax
+
+    from repro.sim.backends.jax_batched import JaxBatchedBackend
+
+    n = jax.device_count()
+    assert n >= 2, f"need multiple devices, got {n} (XLA_FLAGS not applied?)"
+    # d=1: the unsharded reference; d=n: every virtual device; d=3 (when it
+    # does not divide the padded pow2 lane buckets) exercises the padding /
+    # masking edge; async off re-checks the synchronous drain path
+    backends = [
+        ("d1", JaxBatchedBackend(data_parallel=1)),
+        (f"d{n}", JaxBatchedBackend(data_parallel=n)),
+        ("d3", JaxBatchedBackend(data_parallel=3)),
+        (f"d{n}-sync", JaxBatchedBackend(data_parallel=n,
+                                         async_dispatch=False)),
+    ]
+    assert backends[1][1].mesh is not None, "mesh did not form"
+    check_run_batch(backends)
+    check_lockstep(backends)
+    check_what_if(backends)
+    print("SHARD-OK")
+
+
+if __name__ == "__main__":
+    main()
