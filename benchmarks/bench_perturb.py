@@ -1,0 +1,201 @@
+"""Perturbation & drift benchmark: reactive re-pricing vs frozen surrogates.
+
+Replays campaign cells under declarative :class:`PerturbationSpec` scenarios
+(``repro.sim.perturb``) and compares the frozen sim-assisted policies against
+their reactive counterparts:
+
+* ``pe_slowdown`` — 20% of the machine's PEs drop to 1/8 speed mid-run.
+  The frozen ``SimPolicy`` keeps trusting a surrogate calibrated against the
+  nominal machine; ``ReactiveSim`` corrects candidate prices from the
+  measured/predicted fidelity ratio (PageHinkley-gated EMA), and ``AwareSim``
+  runs the two-pass adaptive-surrogate scheme (clean pass, AWF/mAF weight
+  re-estimation, perturbed re-simulation).
+* ``drift`` — the workload's load imbalance sharpens mid-run
+  (``WorkloadDrift(kind="cov")``); ``ReactiveHybrid`` re-prices and
+  re-prunes its RL action window when the reward stream shifts,
+  ``SimHybrid`` keeps the stale pruning.
+* ``clean`` — the bit-equality contract: an *empty* ``PerturbationSpec``
+  must replay bit-identically to ``perturb=None`` (perturbation-off runs
+  equal the goldens by construction).
+
+``smoke(tier)`` is the CI gate: on the perturbed cells the reactive policies
+must beat their frozen counterparts, and the clean contract must hold
+bit-exactly.  ``tier1`` runs the slowdown scenario at drift-check scale;
+``slow`` adds the drift scenario, longer horizons, and repeats the headline
+on the batched JAX backend.  Everything is recorded to
+``results/bench_perturb.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _stamp(record: dict) -> dict:
+    """Platform + device-count metadata (benchmarks/_meta.py) so bench
+    trajectories stay comparable across machines and meshes."""
+    try:
+        from ._meta import stamp
+    except ImportError:          # run as a script, not as benchmarks.*
+        from _meta import stamp
+    return stamp(record)
+
+
+#: the canonical perturbed cell: hacc/broadwell (a near-uniform loop where
+#: the frozen surrogate confidently picks STATIC-ish schedules — exactly
+#: what a PE slowdown punishes hardest)
+APP, SYSTEM, P = "hacc", "broadwell", 20
+
+#: scenario shapes: (T, perturbation onset)
+SIZES = {"tier1": (40, 10), "slow": (120, 30)}
+
+
+def _cell(selector: str, T: int, perturb=None, backend: str = "python",
+          seed: int = 0) -> dict:
+    from repro.sim import run_selector
+
+    t0 = time.perf_counter()
+    run = run_selector(APP, SYSTEM, selector, T=T, seed=seed,
+                       backend=backend, reward="LT", perturb=perturb)
+    return {"total": run.total,
+            "wall_s": round(time.perf_counter() - t0, 2)}
+
+
+def _slowdown_scenario(T: int, onset: int, backend: str = "python") -> dict:
+    """Frozen vs reactive vs two-pass-aware SimPolicy under a mid-run PE
+    slowdown, with ExpertSel as the simulator-free reference."""
+    from repro.sim import pe_slowdown_spec
+
+    pz = pe_slowdown_spec(P, frac=0.2, factor=8.0, t0=onset)
+    out = {"spec": {"frac": 0.2, "factor": 8.0, "t0": onset},
+           "T": T, "backend": backend, "policies": {}}
+    for sel in ("SimPolicy", "ReactiveSim", "AwareSim", "ExpertSel"):
+        out["policies"][sel] = {
+            "perturbed": _cell(sel, T, perturb=pz, backend=backend),
+            "clean": _cell(sel, T, backend=backend)}
+    return out
+
+
+def _drift_scenario(T: int, onset: int, backend: str = "python") -> dict:
+    """Frozen vs reactive SimHybrid under a mid-run cov-sharpening drift
+    (total work preserved; the pruned RL window goes stale)."""
+    from repro.sim import drift_spec
+
+    dz = drift_spec("cov", t0=onset, factor=1.8)
+    out = {"spec": {"kind": "cov", "factor": 1.8, "t0": onset},
+           "T": T, "backend": backend, "app": "tc", "policies": {}}
+    from repro.sim import run_selector
+    for sel in ("SimHybrid", "ReactiveHybrid"):
+        t0 = time.perf_counter()
+        run = run_selector("tc", SYSTEM, sel, T=T, seed=0, backend=backend,
+                           reward="LT", perturb=dz)
+        out["policies"][sel] = {
+            "perturbed": {"total": run.total,
+                          "wall_s": round(time.perf_counter() - t0, 2)}}
+    return out
+
+
+def _clean_contract(T: int, backend: str = "python") -> dict:
+    """Empty PerturbationSpec vs perturb=None: must be bit-equal."""
+    from repro.sim import PerturbationSpec, run_selector
+
+    base = run_selector(APP, SYSTEM, "ExpertSel", T=T, seed=0,
+                        backend=backend)
+    empty = run_selector(APP, SYSTEM, "ExpertSel", T=T, seed=0,
+                         backend=backend, perturb=PerturbationSpec())
+    return {"T": T, "backend": backend, "total": base.total,
+            "bit_equal": bool(base.total == empty.total
+                              and base.history == empty.history)}
+
+
+def _write(results: dict) -> None:
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "bench_perturb.json"), "w") as f:
+        json.dump(_stamp(results), f, indent=2)
+
+
+def run(tier: str = "slow") -> dict:
+    T, onset = SIZES.get(tier, SIZES["tier1"])
+    results = {"config": {"app": APP, "system": SYSTEM, "tier": tier,
+                          "T": T, "onset": onset},
+               "clean_contract": _clean_contract(min(T, 12)),
+               "pe_slowdown": _slowdown_scenario(T, onset)}
+    _write(results)  # checkpoint before the slow-tier extras
+    if tier == "slow":
+        results["pe_slowdown_jax"] = _slowdown_scenario(T, onset,
+                                                        backend="jax")
+        results["drift"] = _drift_scenario(T, onset)
+        _write(results)
+    return results
+
+
+def smoke(tier: str = "tier1") -> None:
+    """CI perturbation gate: reactive beats frozen on the perturbed cell,
+    perturbation-off replays are bit-equal to the goldens."""
+    results = run(tier)
+    assert results["clean_contract"]["bit_equal"], \
+        "empty PerturbationSpec is not bit-equal to perturb=None"
+    pol = results["pe_slowdown"]["policies"]
+    frozen = pol["SimPolicy"]["perturbed"]["total"]
+    reactive = pol["ReactiveSim"]["perturbed"]["total"]
+    aware = pol["AwareSim"]["perturbed"]["total"]
+    print(f"smoke perturb tier={tier}: frozen={frozen:.1f}s "
+          f"reactive={reactive:.1f}s aware={aware:.1f}s", flush=True)
+    assert reactive < frozen, \
+        (f"ReactiveSim {reactive:.2f}s did not beat frozen SimPolicy "
+         f"{frozen:.2f}s under the PE slowdown")
+    assert aware < frozen, \
+        (f"AwareSim {aware:.2f}s did not beat frozen SimPolicy "
+         f"{frozen:.2f}s under the PE slowdown")
+    # clean cells: the reactive machinery must cost ~nothing when idle
+    f0 = pol["SimPolicy"]["clean"]["total"]
+    r0 = pol["ReactiveSim"]["clean"]["total"]
+    assert abs(r0 - f0) < 0.05 * f0, \
+        (f"ReactiveSim clean total {r0:.2f}s drifted >5% from frozen "
+         f"{f0:.2f}s")
+    if tier == "slow":
+        jx = results["pe_slowdown_jax"]["policies"]
+        assert jx["ReactiveSim"]["perturbed"]["total"] < \
+            jx["SimPolicy"]["perturbed"]["total"], \
+            "ReactiveSim did not beat frozen SimPolicy on the JAX backend"
+        dr = results["drift"]["policies"]
+        assert dr["ReactiveHybrid"]["perturbed"]["total"] <= \
+            1.02 * dr["SimHybrid"]["perturbed"]["total"], \
+            "ReactiveHybrid regressed vs frozen SimHybrid under cov drift"
+
+
+def main() -> list:
+    """Harness entry: CSV rows for the tier1-sized scenario set."""
+    res = run("tier1")
+    rows = []
+    for sel, entry in res["pe_slowdown"]["policies"].items():
+        for mode in ("perturbed", "clean"):
+            s = entry[mode]
+            rows.append((f"perturb_slowdown_{sel}_{mode}",
+                         s["wall_s"] * 1e6, f"total={s['total']:.2f}s"))
+    cc = res["clean_contract"]
+    rows.append(("perturb_clean_contract", 0.0,
+                 f"bit_equal={cc['bit_equal']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    # allow `python benchmarks/bench_perturb.py` from the repo root
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--tier", default="tier1", choices=["tier1", "slow"])
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(args.tier)
+    else:
+        for row in main():
+            print(f"{row[0]},{row[1]:.3f},{row[2]}")

@@ -16,6 +16,7 @@ Benches:
     replay       §Backends   lockstep multi-cell replay vs sequential
     event_kernel §Backends   while_loop vs fused Pallas event core
     simpolicy    §SimAS      simulation-assisted selection regret + latency
+    perturb      §Perturb    reactive re-pricing vs frozen under perturbations
     fleet        §Fleet      trace-driven routing over replica groups
     shard        §Mesh       per-device-count scaling of the sharded lanes
 
@@ -45,6 +46,7 @@ SMOKE_GATES = {
     "backends": ("bench_backends", "tier1"),
     "simpolicy": ("bench_simpolicy", "tier1"),
     "serving": ("bench_serving", "tier1"),
+    "perturb": ("bench_perturb", ("tier1", "slow")),
     "fleet": ("bench_fleet", ("tier1", "slow")),
     "replay": ("bench_replay", "slow"),
     "event_kernel": ("bench_event_kernel", "slow"),
@@ -122,8 +124,8 @@ def main() -> None:
 
     from . import (bench_anova, bench_autotune, bench_backends, bench_chunks,
                    bench_cov, bench_degradation, bench_event_kernel,
-                   bench_fleet, bench_replay, bench_roofline, bench_serving,
-                   bench_shard, bench_simpolicy, bench_traces)
+                   bench_fleet, bench_perturb, bench_replay, bench_roofline,
+                   bench_serving, bench_shard, bench_simpolicy, bench_traces)
     benches = {
         "chunks": bench_chunks.main,
         "cov": bench_cov.main,
@@ -137,6 +139,7 @@ def main() -> None:
         "replay": bench_replay.main,
         "event_kernel": bench_event_kernel.main,
         "simpolicy": bench_simpolicy.main,
+        "perturb": bench_perturb.main,
         "fleet": bench_fleet.main,
         "shard": bench_shard.main,
     }

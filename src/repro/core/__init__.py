@@ -12,6 +12,7 @@ from .rewards import (RewardTracker, REWARD_POSITIVE, REWARD_NEUTRAL,
 from .api import (Observation, Decision, SelectionPolicy, register_reward,
                   get_reward, reward_names)
 from .agents import QLearnAgent, SarsaAgent, explore_first_sequence
+from .drift import PageHinkley
 from .selectors import (FixedPolicy, OraclePolicy, RandomPolicy,
                         ExhaustivePolicy, ExpertPolicy, RLPolicy,
                         QLearnPolicy, SarsaPolicy, HybridPolicy,
@@ -43,7 +44,7 @@ __all__ = [
     # simulation-assisted selection (SimAS-style)
     "Candidate", "SimPolicy", "SimAssistedHybrid", "SimUnavailable",
     "SIM_POLICY_ENV", "SIM_POLICY_NAMES", "is_sim_policy",
-    "resolve_sim_policy",
+    "resolve_sim_policy", "PageHinkley",
     # agents + persistence
     "QLearnAgent", "SarsaAgent", "explore_first_sequence",
     "AgentStatsLogger", "save_agent", "load_agent", "save_policy_state",

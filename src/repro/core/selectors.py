@@ -39,7 +39,8 @@ SELECTOR_NAMES = ["Fixed", "RandomSel", "ExhaustiveSel", "ExpertSel",
                   "QLearn", "SARSA", "Hybrid", "Oracle"]
 #: the structured-API spelling of the same registry (plus the
 #: simulation-assisted methods, which need a ``simulator=``)
-POLICY_NAMES = SELECTOR_NAMES + ["SimPolicy", "SimHybrid"]
+POLICY_NAMES = SELECTOR_NAMES + ["SimPolicy", "SimHybrid", "ReactiveSim",
+                                 "ReactiveHybrid", "AwareSim"]
 
 
 # ---------------------------------------------------------------------------
@@ -474,16 +475,22 @@ def make_policy(name: str, **kw) -> SelectionPolicy:
             raise ValueError(
                 f"policy {name!r} needs a simulator= candidate pricer "
                 f"(LoopWhatIf / WaveWhatIf / PlanWhatIf)")
-        if canon == "SimPolicy":
+        if canon in ("SimPolicy", "ReactiveSim", "AwareSim"):
+            # AwareSim is a plain SimPolicy; its two-pass adaptive-surrogate
+            # pricing lives in the lane's LoopWhatIf (campaign wiring keys on
+            # the selector name)
             return SimPolicy(kw["simulator"],
+                             reactive=(canon == "ReactiveSim"),
                              **_pick(kw, "candidates",
-                                     "confidence_threshold", "n_actions"),
+                                     "confidence_threshold", "n_actions",
+                                     "fidelity_alpha", "detector"),
                              **_reward_kw(kw))
         return SimAssistedHybrid(kw["simulator"],
+                                 reactive=(canon == "ReactiveHybrid"),
                                  **_pick(kw, "top_k", "agent", "expert_steps",
                                          "window", "alpha", "gamma",
                                          "alpha_decay", "decay_mode",
-                                         "n_actions"),
+                                         "n_actions", "detector"),
                                  **_reward_kw(kw))
     raise ValueError(f"unknown selection policy {name!r}")
 

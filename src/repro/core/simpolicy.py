@@ -52,6 +52,7 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from .api import Decision, Observation, SelectionPolicy, get_reward
+from .drift import PageHinkley
 from .portfolio import N_ALGORITHMS
 from .rewards import REWARD_POSITIVE
 from .selectors import ExpertPolicy, HybridPolicy
@@ -66,14 +67,25 @@ __all__ = [
 #: "SimHybrid"); consumers resolve it through :func:`resolve_sim_policy`.
 SIM_POLICY_ENV = "REPRO_SIM_POLICY"
 
-#: canonical registry spellings (``make_policy`` accepts these, lowercased)
-SIM_POLICY_NAMES = ["SimPolicy", "SimHybrid"]
+#: canonical registry spellings (``make_policy`` accepts these, lowercased).
+#: The ``Reactive*`` variants re-price / re-prune when a drift detector fires
+#: on the live stream; ``AwareSim`` is a plain SimPolicy whose campaign lane
+#: prices through a two-pass adaptive-surrogate what-if (the lane wiring in
+#: ``repro.sim.campaign`` switches on this name).
+SIM_POLICY_NAMES = ["SimPolicy", "SimHybrid", "ReactiveSim",
+                    "ReactiveHybrid", "AwareSim"]
 
 _SIM_ALIASES = {
     "simpolicy": "SimPolicy", "sim": "SimPolicy", "simsel": "SimPolicy",
     "simas": "SimPolicy",
     "simhybrid": "SimHybrid", "sim-hybrid": "SimHybrid",
     "simassistedhybrid": "SimHybrid",
+    "reactivesim": "ReactiveSim", "simreact": "ReactiveSim",
+    "reactivesimpolicy": "ReactiveSim",
+    "reactivehybrid": "ReactiveHybrid", "simhybridreact": "ReactiveHybrid",
+    "reactivesimhybrid": "ReactiveHybrid",
+    "awaresim": "AwareSim", "simaware": "AwareSim",
+    "adaptivesim": "AwareSim",
 }
 
 
@@ -145,7 +157,9 @@ class SimPolicy(SelectionPolicy):
     def __init__(self, simulator, reward="LT",
                  candidates: Optional[Sequence[Candidate]] = None,
                  confidence_threshold: float = 0.02,
-                 n_actions: int = N_ALGORITHMS):
+                 n_actions: int = N_ALGORITHMS,
+                 reactive: bool = False, fidelity_alpha: float = 0.35,
+                 detector: Optional[PageHinkley] = None):
         self.simulator = simulator
         self.reward_name = reward if isinstance(reward, str) else getattr(
             reward, "__name__", "custom")
@@ -158,6 +172,19 @@ class SimPolicy(SelectionPolicy):
         #: sim-driven instance — fidelity introspection for studies
         self.pred_log: List[tuple] = []
         self._last_pred: Optional[float] = None
+        # --- reactive re-pricing (perturbation-aware variant) -------------
+        self.reactive = bool(reactive)
+        if self.reactive:
+            self.name = "ReactiveSim"
+        self.fidelity_alpha = float(fidelity_alpha)
+        self.detector = detector if detector is not None else (
+            PageHinkley() if self.reactive else None)
+        #: per-(alg, chunk_param) EMA of measured/predicted cost — the live
+        #: fidelity correction multiplying each candidate's simulated price
+        self._corrections: dict = {}
+        self._last_key: Optional[tuple] = None
+        #: number of drift detections that flushed the correction table
+        self.drift_events = 0
 
     def _candidate_set(self) -> List[Candidate]:
         if self._candidates is not None:
@@ -176,8 +203,15 @@ class SimPolicy(SelectionPolicy):
             self._last_pred = None
             d = self._fallback.decide()
             return Decision(action=d.action, phase="expert", confidence=0.0)
-        costs = np.array([self._reward_fn(o) for o in priced],
-                         dtype=np.float64)
+        raw = np.array([self._reward_fn(o) for o in priced],
+                       dtype=np.float64)
+        costs = raw
+        if self.reactive and self._corrections:
+            # live surrogate-fidelity corrections: multiply each candidate's
+            # simulated price by its measured/predicted EMA ratio
+            costs = raw * np.array(
+                [self._corrections.get((c.alg, c.chunk_param), 1.0)
+                 for c in cands], dtype=np.float64)
         best = int(np.argmin(costs))
         lo, hi = float(costs[best]), float(costs.max())
         spread = (hi - lo) / max(abs(hi), 1e-12)
@@ -185,12 +219,17 @@ class SimPolicy(SelectionPolicy):
             # indistinguishable candidates: the prediction carries no signal
             d = self._fallback.decide()
             self._last_pred = None
+            self._last_key = None
             return Decision(action=d.action, phase="expert",
                             confidence=d.confidence)
         # committed: confidence is the relative margin to the runner-up
         second = float(np.partition(costs, 1)[1]) if len(costs) > 1 else hi
         conf = float(np.clip((second - lo) / max(abs(second), 1e-12), 0, 1))
-        self._last_pred = lo
+        # fidelity bookkeeping uses the RAW simulated price of the committed
+        # candidate (corrections must calibrate against the simulator, not
+        # against themselves)
+        self._last_pred = float(raw[best])
+        self._last_key = (cands[best].alg, cands[best].chunk_param)
         return Decision(action=cands[best].alg,
                         chunk_param=cands[best].chunk_param,
                         phase="exploit", confidence=conf)
@@ -198,9 +237,27 @@ class SimPolicy(SelectionPolicy):
     def feedback(self, decision: Decision, obs: Observation) -> None:
         # keep the fallback ladder tracking the live trajectory
         self._fallback.feedback(decision, obs)
-        if self._last_pred is not None:
-            self.pred_log.append((self._last_pred, self._reward_fn(obs)))
-            self._last_pred = None
+        if self._last_pred is None:
+            return
+        pred, key = self._last_pred, self._last_key
+        self._last_pred = None
+        self._last_key = None
+        measured = self._reward_fn(obs)
+        self.pred_log.append((pred, measured))
+        if not self.reactive or key is None:
+            return
+        if pred <= 0.0 or measured <= 0.0:
+            return              # ratio undefined (e.g. signed rewards)
+        ratio = measured / pred
+        prev = self._corrections.get(key, 1.0)
+        a = self.fidelity_alpha
+        self._corrections[key] = (1.0 - a) * prev + a * ratio
+        if self.detector is not None and self.detector.update(
+                float(np.log(ratio))):
+            # the world shifted: corrections learned before the drift are
+            # stale for every candidate except the one just measured
+            self._corrections = {key: self._corrections[key]}
+            self.drift_events += 1
 
 
 # ---------------------------------------------------------------------------
@@ -221,11 +278,19 @@ class SimAssistedHybrid(HybridPolicy):
     name = "SimHybrid"
 
     def __init__(self, simulator, top_k: int = 4, expert_steps: int = 2,
-                 **kw):
+                 reactive: bool = False,
+                 detector: Optional[PageHinkley] = None, **kw):
         kw.setdefault("window", top_k)
         super().__init__(expert_steps=expert_steps, **kw)
         self.simulator = simulator
         self.top_k = max(1, min(int(top_k), self.n_actions))
+        # --- reactive re-pruning (perturbation-aware variant) -------------
+        self.reactive = bool(reactive)
+        if self.reactive:
+            self.name = "ReactiveHybrid"
+        self.detector = detector if detector is not None else (
+            PageHinkley() if self.reactive else None)
+        self.drift_events = 0
 
     def _build_agent(self) -> None:
         try:
@@ -246,3 +311,16 @@ class SimAssistedHybrid(HybridPolicy):
         # seed: the predicted winner starts strictly above the 0-initialized
         # alternatives, so post-exploration greedy ties break toward it
         self.agent.q[:, self.actions.index(best)] = REWARD_POSITIVE
+
+    def feedback(self, decision: Decision, obs: Observation) -> None:
+        super().feedback(decision, obs)
+        if not self.reactive or self.detector is None:
+            return
+        if self.agent is None or self.agent.learning:
+            return              # still exploring: cost swings are expected
+        if self.detector.update(self._reward_fn(obs)):
+            # the exploitation-phase cost stream shifted: re-price the full
+            # grid against the simulator's *current* context and re-prune the
+            # exploration window (fresh agent, fresh Eulerian sweep)
+            self._build_agent()
+            self.drift_events += 1

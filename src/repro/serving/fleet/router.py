@@ -73,11 +73,16 @@ class LeastOutstandingRouter(RouterPolicy):
     def route(self, requests: List[Request], view) -> List[List[Request]]:
         G = len(view.busy)
         load = np.array([b.sum() for b in view.busy])
+        # on a skewed fleet the same request costs more service seconds on
+        # a slowed group (capacity < 1); uniform fleets take the exact
+        # historical path
+        slow = (np.ones(G) if getattr(view, "capacity", None) is None
+                else 1.0 / np.asarray(view.capacity))
         shards: List[List[Request]] = [[] for _ in range(G)]
         for r in requests:
             g = int(np.argmin(load))
             shards[g].append(r)
-            load[g] += request_cost(r, view.cost)
+            load[g] += request_cost(r, view.cost) * slow[g]
         return shards
 
 
@@ -177,7 +182,13 @@ class WhatIfRouter(RouterPolicy):
                     continue
                 slot = len(slots)
                 slots.append((pname, g))
-                prefixes.append(view.cost_prefix(shard))
+                pref = view.cost_prefix(shard)
+                if getattr(view, "capacity", None) is not None:
+                    # a slowed group serves the same shard 1/capacity times
+                    # slower — scale its what-if cost prefix so the pricing
+                    # pass sees the perturbed fleet, not the nominal one
+                    pref = pref * (1.0 / float(view.capacity[g]))
+                prefixes.append(pref)
                 avails.append(view.busy[g])
                 chunks = [0]
                 if self.chunk_variants:

@@ -37,6 +37,7 @@ import numpy as np
 from ...core import percent_load_imbalance
 from ...data.pipeline import Request
 from ...sim.backends import get_backend
+from ...sim.perturb import FleetPerturb
 from ..engine import DispatchSimulator, ReplicaCostModel
 from .router import RouterPolicy, make_router, request_cost
 from .traces import ArrivalTrace
@@ -52,6 +53,10 @@ class FleetView:
     cost: ReplicaCostModel
     h: float                        # per-chunk dispatch overhead
     backend: object = None          # SimBackend for what-if pricing
+    #: (G,) relative service-rate capacity per group (1.0 nominal, < 1 for
+    #: a slowed group); None = homogeneous — routers and admission control
+    #: then take their exact historical paths
+    capacity: Optional[np.ndarray] = None
 
     def cost_prefix(self, requests: Sequence[Request]) -> np.ndarray:
         """(N+1,) cumulative service-cost prefix of a request shard (the
@@ -112,13 +117,24 @@ class AdmissionControl:
         if self.p95_slo is not None and k > self.min_admit:
             oldest = now - pending[0].arrival
             busy_p95 = float(np.percentile(np.concatenate(view.busy), 95))
+            # aggregate service rate in replica-equivalents: on a skewed
+            # fleet a slowed group drains fewer requests per second, so the
+            # horizon must weight by per-group capacity (uniform capacity
+            # reduces to the historical G * R exactly)
+            cap = view.capacity if view.capacity is not None else np.ones(G)
+            rate = float(cap.sum()) * R
             while k > self.min_admit:
                 pred = oldest + busy_p95 \
-                    + float(head_costs[:k].sum()) / (G * R)
+                    + float(head_costs[:k].sum()) / rate
                 if pred <= self.p95_slo:
                     break
                 k //= 2
-        return max(min(self.min_admit, len(pending)), k)
+        if outstanding <= 0.0:
+            # idle-fleet floor only: with work still outstanding, a k the
+            # backpressure terms drove to 0 must STAY 0 — re-admitting
+            # min_admit here defeated queue-depth backpressure entirely
+            k = max(k, min(self.min_admit, len(pending)))
+        return max(k, 0)
 
 
 @dataclass
@@ -158,7 +174,9 @@ class FleetSimulator:
                  backend: Optional[str] = None,
                  admission: Optional[AdmissionControl] = None,
                  store_dir: Optional[str] = None,
-                 selector_kw: Optional[dict] = None):
+                 selector_kw: Optional[dict] = None,
+                 group_slowdown: Optional[Sequence[float]] = None,
+                 perturb: Optional[FleetPerturb] = None):
         self.G = n_groups
         self.R = replicas_per_group
         self.cost = cost_model or ReplicaCostModel()
@@ -167,6 +185,17 @@ class FleetSimulator:
         self.admission = admission or AdmissionControl()
         self.backend = get_backend(backend)
         self.store_dir = store_dir
+        # persistent per-group service-time slowdowns (heterogeneous fleet)
+        # composed with time-windowed FleetPerturb events per wave
+        self.group_slowdown = None if group_slowdown is None else \
+            np.asarray(group_slowdown, np.float64)
+        if self.group_slowdown is not None and \
+                len(self.group_slowdown) != self.G:
+            raise ValueError(
+                f"group_slowdown has {len(self.group_slowdown)} entries "
+                f"for {self.G} groups")
+        self.perturb = perturb
+        self._cost_scale = np.ones(self.G)
         kw = dict(selector_kw or {})
         if store_dir is not None:
             os.makedirs(store_dir, exist_ok=True)
@@ -196,10 +225,37 @@ class FleetSimulator:
         return [sim.service.warm_started(sim.region) for sim in self.groups]
 
     # -- simulation ----------------------------------------------------------
-    def _view(self, now: float, finish: np.ndarray) -> FleetView:
+    def _slowdowns(self, now: float) -> Optional[np.ndarray]:
+        """(G,) service-time slowdowns active at ``now``; None when the
+        fleet is exactly homogeneous (the bit-identical clean path)."""
+        f = self.group_slowdown
+        if self.perturb is not None:
+            p = self.perturb.slowdowns(now, self.G)
+            f = p if f is None else f * p
+        if f is None or bool(np.all(f == 1.0)):
+            return None
+        return f
+
+    def _apply_slowdowns(self, f: Optional[np.ndarray]) -> None:
+        """Rescale each group's dispatch cost model to the slowdowns active
+        this wave (no-op — object-identical cost models — while uniform)."""
+        want = np.ones(self.G) if f is None else f
+        for g, sim in enumerate(self.groups):
+            if want[g] == self._cost_scale[g]:
+                continue
+            s = float(want[g])
+            sim.cost = self.cost if s == 1.0 else ReplicaCostModel(
+                fixed=self.cost.fixed * s,
+                per_token=self.cost.per_token * s,
+                per_request=self.cost.per_request * s)
+            self._cost_scale[g] = s
+
+    def _view(self, now: float, finish: np.ndarray,
+              f: Optional[np.ndarray] = None) -> FleetView:
         busy = [np.maximum(finish[g] - now, 0.0) for g in range(self.G)]
         return FleetView(now=now, busy=busy, n_replicas=self.R,
-                         cost=self.cost, h=self.h, backend=self.backend)
+                         cost=self.cost, h=self.h, backend=self.backend,
+                         capacity=None if f is None else 1.0 / f)
 
     def run(self, trace: Union[ArrivalTrace, Sequence[Request]],
             keep_latencies: bool = False) -> FleetReport:
@@ -236,8 +292,20 @@ class FleetSimulator:
                     while i < n and reqs[i].arrival <= now:
                         pending.append(reqs[i])
                         i += 1
-            view = self._view(now, finish)
+            f = self._slowdowns(now)
+            self._apply_slowdowns(f)
+            view = self._view(now, finish, f)
             k = self.admission.admit(pending, now, view)
+            if k <= 0 and pending:
+                # backpressure holds the whole wave: let the fleet drain to
+                # the next replica-free instant and re-evaluate (never
+                # busy-spin — admit() floors to min_admit once idle)
+                deferred += len(pending)
+                future = finish[finish > now]
+                if future.size:
+                    now = float(future.min())
+                    continue
+                k = min(len(pending), max(1, self.admission.min_admit))
             batch = [pending.popleft() for _ in range(k)]
             deferred += len(pending)
             shards = self.router.route(batch, view)

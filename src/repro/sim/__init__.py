@@ -5,13 +5,17 @@ Python event loop and a batched vmapped JAX engine share one protocol, one
 event cap, and one noise model contract.
 """
 
-from .systems import SYSTEMS, SystemModel, get_system
+from .systems import (HETERO_SYSTEMS, SYSTEMS, SystemModel, get_system,
+                      hetero_system)
 from .workloads import (APPLICATIONS, Application, LoopProfile, ProfileStack,
                         get_application, stack_prefix_grids)
 from .engine import InstanceResult, run_instance
-from .backends import (EVENT_CAP, BatchResult, InstanceSpec, LockstepRequest,
-                       SimBackend, backend_names, get_backend,
-                       register_backend)
+from .backends import (EVENT_CAP, BatchResult, InstancePerturb, InstanceSpec,
+                       LockstepRequest, SimBackend, backend_names,
+                       get_backend, register_backend)
+from .perturb import (FleetPerturb, GroupSlowdown, NoiseBurst, PEFailure,
+                      PESlowdown, PerturbationSpec, WorkloadDrift,
+                      drift_spec, noise_burst_spec, pe_slowdown_spec)
 from .whatif import LoopWhatIf, noise_free
 from .campaign import (CampaignResult, CellSpec, FixedRun, PortfolioSweep,
                        ReplayBatch, SelectorRun, run_campaign,
@@ -21,11 +25,15 @@ from .campaign import (CampaignResult, CellSpec, FixedRun, PortfolioSweep,
                        EXTENDED_SELECTOR_GRID, SIM_SELECTOR_GRID)
 
 __all__ = [
-    "SYSTEMS", "SystemModel", "get_system", "APPLICATIONS", "Application",
+    "SYSTEMS", "HETERO_SYSTEMS", "SystemModel", "get_system",
+    "hetero_system", "APPLICATIONS", "Application",
     "LoopProfile", "ProfileStack", "stack_prefix_grids", "get_application",
     "InstanceResult",
-    "run_instance", "EVENT_CAP", "BatchResult", "InstanceSpec",
-    "LockstepRequest", "SimBackend",
+    "run_instance", "EVENT_CAP", "BatchResult", "InstancePerturb",
+    "InstanceSpec", "LockstepRequest", "SimBackend",
+    "PerturbationSpec", "PESlowdown", "PEFailure", "NoiseBurst",
+    "WorkloadDrift", "FleetPerturb", "GroupSlowdown",
+    "pe_slowdown_spec", "noise_burst_spec", "drift_spec",
     "backend_names", "get_backend", "register_backend",
     "CampaignResult", "CellSpec", "FixedRun", "PortfolioSweep",
     "ReplayBatch", "SelectorRun",

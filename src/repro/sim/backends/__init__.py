@@ -23,8 +23,9 @@ from __future__ import annotations
 import os
 from typing import Callable, Dict, Optional, Union
 
-from .base import (EVENT_CAP, BatchResult, InstanceSpec, LockstepRequest,
-                   SimBackend, needs_closed_form)
+from .base import (EVENT_CAP, BatchResult, InstancePerturb, InstanceSpec,
+                   LockstepRequest, SimBackend, combined_pe_scale,
+                   needs_closed_form, sigma_scale_of)
 
 _FACTORIES: Dict[str, Callable[[], SimBackend]] = {}
 _INSTANCES: Dict[str, SimBackend] = {}
@@ -77,7 +78,8 @@ register_backend("jax", _make_jax)
 register_backend("jax-pallas", _make_jax_pallas)
 
 __all__ = [
-    "EVENT_CAP", "BatchResult", "InstanceSpec", "LockstepRequest",
-    "SimBackend", "needs_closed_form", "get_backend", "register_backend",
-    "backend_names", "BACKEND_ENV",
+    "EVENT_CAP", "BatchResult", "InstancePerturb", "InstanceSpec",
+    "LockstepRequest", "SimBackend", "combined_pe_scale", "needs_closed_form",
+    "sigma_scale_of", "get_backend", "register_backend", "backend_names",
+    "BACKEND_ENV",
 ]

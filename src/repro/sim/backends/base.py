@@ -44,16 +44,76 @@ def needs_closed_form(alg: int, N: int, chunk_param: int,
 
 
 @dataclass(frozen=True)
+class InstancePerturb:
+    """Per-instance view of an injected perturbation (``repro.sim.perturb``
+    resolves a time-windowed :class:`PerturbationSpec` into one of these per
+    time step).
+
+    ``pe_scale`` multiplies each PE's execution time (1.0 nominal, > 1
+    slower, ~1e4 models a failed PE the dynamic algorithms must route
+    around); ``sigma_scale`` multiplies the machine's lognormal noise sigma
+    (bursty noise).  ``None`` / 1.0 are exact no-ops: both backends apply
+    the multipliers as IEEE ``x * 1.0`` identities without consuming any
+    extra rng draws, so a neutral perturbation is bit-equal to no
+    perturbation at all (test-enforced).
+    """
+
+    pe_scale: Optional[Tuple[float, ...]] = None
+    sigma_scale: float = 1.0
+
+    def __post_init__(self):
+        if self.pe_scale is not None:
+            object.__setattr__(self, "pe_scale",
+                               tuple(float(x) for x in self.pe_scale))
+        object.__setattr__(self, "sigma_scale", float(self.sigma_scale))
+
+    @property
+    def neutral(self) -> bool:
+        return self.sigma_scale == 1.0 and (
+            self.pe_scale is None
+            or all(x == 1.0 for x in self.pe_scale))
+
+    def key(self) -> Tuple:
+        """Hashable cache-key component (pricing caches must not alias a
+        perturbed run with a clean one)."""
+        return (self.pe_scale, self.sigma_scale)
+
+
+def combined_pe_scale(system, perturb: Optional[InstancePerturb]
+                      ) -> Optional[np.ndarray]:
+    """Per-PE execution-time multipliers: the machine model's persistent
+    heterogeneity (``SystemModel.pe_speeds``) composed with any instance
+    perturbation.  ``None`` means exactly uniform — callers skip the
+    multiply entirely, keeping clean runs bit-identical."""
+    speeds = getattr(system, "pe_speeds", None)
+    out = None if speeds is None else np.asarray(speeds, np.float64)
+    if perturb is not None and perturb.pe_scale is not None:
+        ps = np.asarray(perturb.pe_scale, np.float64)
+        out = ps if out is None else out * ps
+    return out
+
+
+def sigma_scale_of(perturb: Optional[InstancePerturb]) -> float:
+    return 1.0 if perturb is None else perturb.sigma_scale
+
+
+@dataclass(frozen=True)
 class InstanceSpec:
     """One loop instance inside a batch: which profile, which algorithm,
     which chunk parameter, and the full rng seed tuple (the campaign's
     crc32-label convention).  ``fold_seed`` collapses the tuple into one
-    stateless uint32 for counter-based (JAX) rng streams."""
+    stateless uint32 for counter-based (JAX) rng streams.
+
+    ``perturb`` is deliberately excluded from ``fold_seed``: a perturbed
+    instance keeps the exact noise stream of its clean twin, so enabling a
+    perturbation never shifts any other lane's (or its own) draws.
+    """
 
     profile_id: int
     alg: int
     chunk_param: int
     seed: Tuple[int, ...]
+    perturb: Optional[InstancePerturb] = None
 
     def fold_seed(self) -> int:
         return zlib.crc32(np.asarray(self.seed, dtype=np.int64).tobytes())
@@ -85,6 +145,7 @@ class LockstepRequest:
     alg: int
     chunk_param: int
     rng: np.random.Generator
+    perturb: Optional[InstancePerturb] = None
 
 
 class SimBackend(abc.ABC):
@@ -95,7 +156,8 @@ class SimBackend(abc.ABC):
 
     @abc.abstractmethod
     def run_instance(self, profile, system, alg: int, chunk_param: int,
-                     rng, record_chunks: bool = False):
+                     rng, record_chunks: bool = False,
+                     perturb: Optional[InstancePerturb] = None):
         """Simulate one loop instance; returns an ``InstanceResult``."""
 
     @abc.abstractmethod
@@ -121,7 +183,7 @@ class SimBackend(abc.ABC):
         nc = np.zeros(B, np.int64)
         for i, q in enumerate(requests):
             r = self.run_instance(profiles[q.profile_id], system, q.alg,
-                                  q.chunk_param, q.rng)
+                                  q.chunk_param, q.rng, perturb=q.perturb)
             lt[i], lib[i], nc[i] = r.loop_time, r.lib, r.n_chunks
         return BatchResult(loop_time=lt, lib=lib, n_chunks=nc)
 

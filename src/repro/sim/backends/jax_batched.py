@@ -75,13 +75,16 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as Pspec
 
-from ...core.jaxsched import chunk_schedule, staticsteal_schedule
+from ...core.jaxsched import (chunk_schedule, staticsteal_schedule,
+                              weighted_adaptive_schedule)
+from ...core.portfolio import ADAPTIVE_SET
 from ...distributed.sharding import lane_count, lane_spec, pad_lanes
 from ...launch.mesh import campaign_mesh
 from ..workloads import profile_digest as _profile_digest
 from ..workloads import stack_prefix_grids
-from .base import (EVENT_CAP, BatchResult, InstanceSpec, LockstepRequest,
-                   SimBackend, needs_closed_form)
+from .base import (EVENT_CAP, BatchResult, InstancePerturb, InstanceSpec,
+                   LockstepRequest, SimBackend, combined_pe_scale,
+                   needs_closed_form, sigma_scale_of)
 from .python import InstanceResult, _h_eff, run_instance as _py_run_instance
 
 #: lax.while_loop buffer buckets for schedule length (powers of four keep
@@ -100,6 +103,10 @@ DATA_PARALLEL_ENV = "REPRO_DATA_PARALLEL"
 #: env var toggling double-buffered async dispatch ("0" restores the
 #: synchronous pack -> dispatch -> drain loop)
 ASYNC_DISPATCH_ENV = "REPRO_ASYNC_DISPATCH"
+#: env var toggling the weighted adaptive surrogates under perturbed /
+#: heterogeneous PE speeds ("0" keeps the weights-at-1 recurrences — the
+#: A/B knob for the two-pass fidelity benchmarks)
+ADAPTIVE_REWEIGHT_ENV = "REPRO_ADAPTIVE_REWEIGHT"
 
 
 def _next_bucket(n: int) -> int:
@@ -165,6 +172,13 @@ def resolve_async_dispatch(async_dispatch: Optional[bool] = None) -> bool:
     return bool(async_dispatch)
 
 
+def resolve_adaptive_reweight(adaptive_reweight: Optional[bool] = None
+                              ) -> bool:
+    if adaptive_reweight is None:
+        return os.environ.get(ADAPTIVE_REWEIGHT_ENV, "1") != "0"
+    return bool(adaptive_reweight)
+
+
 class _LRU:
     """Tiny LRU mapping bounding the process-wide caches (schedules, steal
     replays, device-resident grid stacks) of the singleton backend."""
@@ -228,28 +242,36 @@ def _core_finish(core: str, eff, speed, jitter, h_eff, bcost, forced,
 
 def _batched_events_impl(P: int, core: str, grids, grid_id, inv_n, starts,
                          sizes, loc, count, forced, seeds, h_eff, bcost,
-                         sigma, jitter_max, speed_spread):
+                         pe_mult, sig_scale, sigma, jitter_max,
+                         speed_spread):
     """Batched event loop: shared data-parallel precompute + one sequential
     core call.
 
     grids (S, G+1) f32; per-lane arrays: grid_id (B,), inv_n (B,),
     starts/sizes (B, K) i32, loc (B, K) f32, count (B,), forced (B, K) i32
-    (-1 = argmin assignment), seeds (B,) u32, h_eff/bcost (B,).
+    (-1 = argmin assignment), seeds (B,) u32, h_eff/bcost (B,),
+    pe_mult (B, P) f32 per-PE execution-time multipliers and sig_scale (B,)
+    f32 noise-sigma scales (the perturbation-injection lanes — all-1.0 rows
+    are exact IEEE no-ops, so unperturbed lanes stay bit-identical and the
+    event cores never see perturbation state).
     Returns (makespan (B,), lib (B,), finish (B, P)).
     """
     G = grids.shape[1] - 1
     K = starts.shape[1]
 
-    def draws(seed):
+    def draws(seed, ss):
         key = jax.random.PRNGKey(seed)
         kj, ks, kn = jax.random.split(key, 3)
         jitter = jax.random.uniform(kj, (P,)) * jitter_max
         speed = jnp.clip(1.0 + speed_spread * jax.random.normal(ks, (P,)),
                          0.8, 1.25)
-        noise = jnp.exp(sigma * jax.random.normal(kn, (K,)))
+        noise = jnp.exp((sigma * ss) * jax.random.normal(kn, (K,)))
         return jitter, speed, noise
 
-    jitter, speed, noise = jax.vmap(draws)(seeds)
+    jitter, speed, noise = jax.vmap(draws)(seeds, sig_scale)
+    # perturbation / heterogeneity enters HERE, in the shared precompute —
+    # upstream of every event core, so while_loop and Pallas stay identical
+    speed = speed * pe_mult
     gscale = G * inv_n
 
     if core == "pallas":
@@ -339,7 +361,7 @@ def _sharded_events(mesh, P: int, core: str):
     lane, rep = lane_spec(mesh), Pspec()
     fn = shard_map(functools.partial(_batched_events_impl, P, core),
                    mesh=mesh,
-                   in_specs=(rep,) + (lane,) * 10 + (rep,) * 3,
+                   in_specs=(rep,) + (lane,) * 12 + (rep,) * 3,
                    out_specs=(lane, lane, lane),
                    check_rep=False)   # no replicated outputs, no collectives
     return jax.jit(fn)
@@ -392,7 +414,8 @@ class JaxBatchedBackend(SimBackend):
 
     def __init__(self, kernel: Optional[str] = None,
                  data_parallel: Optional[int] = None,
-                 async_dispatch: Optional[bool] = None):
+                 async_dispatch: Optional[bool] = None,
+                 adaptive_reweight: Optional[bool] = None):
         self.event_core = resolve_event_core(kernel)
         if self.event_core != "while_loop":
             self.name = f"jax-{self.event_core}"
@@ -400,6 +423,10 @@ class JaxBatchedBackend(SimBackend):
         self.mesh = (campaign_mesh(self.data_parallel)
                      if self.data_parallel > 1 else None)
         self.async_dispatch = resolve_async_dispatch(async_dispatch)
+        # weighted adaptive surrogates under non-uniform PE speeds (the
+        # two-pass scheme's second pass); "off" keeps the weights-at-1
+        # recurrences for fidelity A/B comparisons
+        self.adaptive_reweight = resolve_adaptive_reweight(adaptive_reweight)
         # (alg, N, P, cp) -> sizes ndarray, for central-queue algorithms
         self._sched_cache = _LRU(512)
         # StaticSteal replays keyed additionally by the cost/locality params
@@ -491,6 +518,23 @@ class JaxBatchedBackend(SimBackend):
             self._steal_cache.put(key, out)
         return out
 
+    def _weighted_schedule(self, alg: int, N: int, P: int, cp: int,
+                           scale: np.ndarray):
+        """Weighted adaptive schedule under a non-uniform PE-speed vector
+        (the two-pass re-estimation: weights are the converged mean-1
+        inverse speeds).  Cached under a 5-tuple key — the clean 4-tuple
+        ``(alg, N, P, cp)`` entries can never collide with it, so perturbed
+        lanes never poison unperturbed ones (test-enforced)."""
+        w = 1.0 / scale
+        w *= P / w.sum()
+        wkey = tuple(np.round(w, 9))
+        key = (alg, N, P, cp, wkey)
+        hit = self._sched_cache.get(key)
+        if hit is None:
+            hit = weighted_adaptive_schedule(alg, N, P, cp, w)
+            self._sched_cache.put(key, hit)
+        return hit
+
     def _event_rows(self, spec: InstanceSpec, profile, system):
         """(starts, sizes, loc, forced) numpy rows for one event instance."""
         N, P = profile.N, system.P
@@ -504,6 +548,16 @@ class JaxBatchedBackend(SimBackend):
             loc = np.where(own, 1.0,
                            base_infl + amp * c_loc / (sizes + c_loc))
             return starts, sizes, loc.astype(np.float32), pes
+        scale = combined_pe_scale(system, spec.perturb)
+        if (self.adaptive_reweight and spec.alg in ADAPTIVE_SET
+                and scale is not None and not np.all(scale == 1.0)):
+            sizes, pes = self._weighted_schedule(
+                spec.alg, N, P, spec.chunk_param, scale)
+            starts = np.concatenate(
+                [[0], np.cumsum(sizes)[:-1]]).astype(np.int32)
+            loc = (base_infl + amp * c_loc / (sizes + c_loc)).astype(
+                np.float32)
+            return starts, sizes.astype(np.int32), loc, pes
         sizes = self._central_schedule(spec.alg, N, P, spec.chunk_param)
         starts = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int32)
         loc = (base_infl + amp * c_loc / (sizes + c_loc)).astype(np.float32)
@@ -547,7 +601,7 @@ class JaxBatchedBackend(SimBackend):
                                                s.chunk_param):
                 rng = np.random.default_rng(s.seed)
                 r = _py_run_instance(profile, system, s.alg, s.chunk_param,
-                                     rng)
+                                     rng, perturb=s.perturb)
                 lt[i], lib[i], nc[i] = r.loop_time, r.lib, r.n_chunks
             else:
                 event_ids.append(i)
@@ -581,6 +635,15 @@ class JaxBatchedBackend(SimBackend):
         bc_all = np.fromiter(
             (profiles[s.profile_id].memory_bound * system.boundary_cost
              for s in specs), np.float32, B)
+        # perturbation lanes: per-PE multipliers and sigma scales (rows stay
+        # exactly 1.0 for clean lanes — IEEE-identity multiplies downstream)
+        pm_all = np.ones((B, P), np.float32)
+        ss_all = np.ones(B, np.float32)
+        for i, s in enumerate(specs):
+            scale = combined_pe_scale(system, s.perturb)
+            if scale is not None:
+                pm_all[i] = scale
+            ss_all[i] = sigma_scale_of(s.perturb)
 
         by_bucket: Dict[int, List[int]] = {}
         for i, c in enumerate(counts):
@@ -621,14 +684,18 @@ class JaxBatchedBackend(SimBackend):
                     seeds = np.zeros(Bp, np.uint32)
                     h_eff = np.zeros(Bp, np.float32)
                     bcost = np.zeros(Bp, np.float32)
+                    pe_mult = np.ones((Bp, P), np.float32)
+                    sscale = np.ones(Bp, np.float32)
                     gid[:n] = gid_all[sub]
                     inv_n[:n] = inv_all[sub]
                     cnt[:n] = lens
                     seeds[:n] = seed_all[sub]
                     h_eff[:n] = h_all[sub]
                     bcost[:n] = bc_all[sub]
+                    pe_mult[:n] = pm_all[sub]
+                    sscale[:n] = ss_all[sub]
                     yield sub, (gid, inv_n, starts, sizes, loc, cnt, forced,
-                                seeds, h_eff, bcost)
+                                seeds, h_eff, bcost, pe_mult, sscale)
 
         def drain(sub, res):
             n = len(sub)
@@ -682,13 +749,13 @@ class JaxBatchedBackend(SimBackend):
             if q.alg == 0 or needs_closed_form(q.alg, profile.N,
                                                q.chunk_param):
                 r = _py_run_instance(profile, system, q.alg, q.chunk_param,
-                                     q.rng)
+                                     q.rng, perturb=q.perturb)
                 lt[i], lib[i], nc[i] = r.loop_time, r.lib, r.n_chunks
             else:
                 seed = (int(q.rng.integers(0, 2**31 - 1)),)
                 specs.append(InstanceSpec(profile_id=q.profile_id, alg=q.alg,
                                           chunk_param=q.chunk_param,
-                                          seed=seed))
+                                          seed=seed, perturb=q.perturb))
                 event_ids.append(i)
         if specs:
             mks, libs, _, counts = self._run_events(profiles, system, specs)
@@ -699,15 +766,17 @@ class JaxBatchedBackend(SimBackend):
     # ---- single instance (selector path) ----------------------------------
 
     def run_instance(self, profile, system, alg: int, chunk_param: int,
-                     rng, record_chunks: bool = False) -> InstanceResult:
+                     rng, record_chunks: bool = False,
+                     perturb: Optional[InstancePerturb] = None
+                     ) -> InstanceResult:
         if alg == 0 or needs_closed_form(alg, profile.N, chunk_param):
             return _py_run_instance(profile, system, alg, chunk_param, rng,
-                                    record_chunks)
+                                    record_chunks, perturb)
         # stateless fold seed drawn from the caller's stream so repeated
         # calls stay reproducible AND distinct
         seed = (int(rng.integers(0, 2**31 - 1)),)
         spec = InstanceSpec(profile_id=0, alg=alg, chunk_param=chunk_param,
-                            seed=seed)
+                            seed=seed, perturb=perturb)
         mk, lib, fin, counts = self._run_events([profile], system, [spec])
         sizes = None
         if record_chunks:

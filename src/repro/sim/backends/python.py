@@ -30,8 +30,9 @@ import numpy as np
 
 from ...core.portfolio import ChunkAlgorithm, make_algorithm
 from ...core.metrics import percent_load_imbalance
-from .base import (EVENT_CAP, BatchResult, InstanceSpec, SimBackend,
-                   needs_closed_form)
+from .base import (EVENT_CAP, BatchResult, InstancePerturb, InstanceSpec,
+                   SimBackend, combined_pe_scale, needs_closed_form,
+                   sigma_scale_of)
 
 H_ATOMIC_ADAPTIVE = 2.0      # h multiplier for atomic-path adaptive algs (C/E/mAF)
 MUTEX_ADAPTIVE = {7, 9}      # AWF-B, AWF-D: mutex-protected weight updates
@@ -49,9 +50,18 @@ class InstanceResult:
         self.lib = percent_load_imbalance(self.finish)
 
 
-def _thread_speeds(system, rng) -> np.ndarray:
+def _thread_speeds(system, rng, perturb=None) -> np.ndarray:
+    """Per-PE execution-time multipliers: the stochastic spread draw (always
+    consumed, so perturbed runs never shift the noise stream), times any
+    heterogeneity / injected perturbation.  The clip applies only to the
+    stochastic part — persistent slow PEs and failures must not be clipped
+    back to 1.25x."""
     s = 1.0 + rng.normal(0.0, system.speed_spread, system.P)
-    return np.clip(s, 0.8, 1.25)
+    s = np.clip(s, 0.8, 1.25)
+    scale = combined_pe_scale(system, perturb)
+    if scale is not None:
+        s = s * scale
+    return s
 
 
 def _noise(system, rng, n: int = 1):
@@ -67,29 +77,32 @@ def _h_eff(system, alg_idx: int) -> float:
 
 
 def run_instance(profile, system, alg_idx: int,
-                 chunk_param: int, rng, record_chunks: bool = False
+                 chunk_param: int, rng, record_chunks: bool = False,
+                 perturb: Optional[InstancePerturb] = None
                  ) -> InstanceResult:
     N = profile.N
 
     if alg_idx == 0:
-        return _run_static(profile, system, chunk_param, rng, record_chunks)
+        return _run_static(profile, system, chunk_param, rng, record_chunks,
+                           perturb)
 
     if needs_closed_form(alg_idx, N, chunk_param):
         return _run_constant_closed(profile, system, alg_idx,
-                                    max(1, chunk_param), rng)
+                                    max(1, chunk_param), rng, perturb)
 
     return _run_events(profile, system, alg_idx, chunk_param, rng,
-                       record_chunks)
+                       record_chunks, perturb)
 
 
 # ---------------------------------------------------------------------------
 # STATIC: pre-assigned ranges, no dispatch events
 # ---------------------------------------------------------------------------
 
-def _run_static(profile, system, chunk_param, rng, record_chunks):
+def _run_static(profile, system, chunk_param, rng, record_chunks,
+                perturb=None):
     P, N, mb = system.P, profile.N, profile.memory_bound
     jitter = rng.uniform(0.0, system.jitter, P)
-    speed = _thread_speeds(system, rng)
+    speed = _thread_speeds(system, rng, perturb)
 
     if chunk_param <= 0:
         # P contiguous ranges of ceil/floor(N/P)
@@ -124,7 +137,8 @@ def _run_static(profile, system, chunk_param, rng, record_chunks):
     else:
         infl = 1.0
     boundary = mb * system.boundary_cost * per_pe_chunks
-    agg_noise = np.exp(rng.normal(0.0, system.noise_sigma * 0.5, P))
+    agg_noise = np.exp(rng.normal(
+        0.0, system.noise_sigma * 0.5 * sigma_scale_of(perturb), P))
     finish = jitter + (cost * infl * speed * agg_noise) + boundary
     return InstanceResult(loop_time=float(finish.max()), finish=finish,
                           n_chunks=int(n_chunks), chunk_sizes=sizes)
@@ -134,7 +148,7 @@ def _run_static(profile, system, chunk_param, rng, record_chunks):
 # constant-chunk closed form (SS / StaticSteal with tiny chunks on huge N)
 # ---------------------------------------------------------------------------
 
-def _run_constant_closed(profile, system, alg_idx, c, rng):
+def _run_constant_closed(profile, system, alg_idx, c, rng, perturb=None):
     P, N, mb = system.P, profile.N, profile.memory_bound
     ls = profile.locality_sens
     n_chunks = -(-N // c)
@@ -149,10 +163,18 @@ def _run_constant_closed(profile, system, alg_idx, c, rng):
     else:
         # StaticSteal: per-thread deques, no central serialization
         overhead = n_chunks * (h * 0.6 + mb * system.boundary_cost) / P
-    base = work / P + overhead
+    # tiny-chunk self-scheduling rebalances perfectly, so heterogeneity /
+    # perturbation enters as aggregate capacity (sum of PE rates), not as a
+    # per-PE finish multiplier; uniform scales reduce to the exact work / P
+    scale = combined_pe_scale(system, perturb)
+    if scale is None:
+        base = work / P + overhead
+    else:
+        base = work / float((1.0 / scale).sum()) + overhead
     jitter = rng.uniform(0.0, system.jitter, P)
     speed = _thread_speeds(system, rng)
-    agg_noise = np.exp(rng.normal(0.0, system.noise_sigma * 0.3, P))
+    agg_noise = np.exp(rng.normal(
+        0.0, system.noise_sigma * 0.3 * sigma_scale_of(perturb), P))
     # self-scheduling balances up to one chunk of spread
     tail = rng.uniform(0.0, 1.0, P) * (work / n_chunks + h)
     finish = jitter.mean() + base * speed * agg_noise + tail
@@ -164,14 +186,15 @@ def _run_constant_closed(profile, system, alg_idx, c, rng):
 # event loop
 # ---------------------------------------------------------------------------
 
-def _run_events(profile, system, alg_idx, chunk_param, rng, record_chunks):
+def _run_events(profile, system, alg_idx, chunk_param, rng, record_chunks,
+                perturb=None):
     P, N, mb = system.P, profile.N, profile.memory_bound
     h = _h_eff(system, alg_idx)
     alg = make_algorithm(alg_idx)
     alg.reset(N, P, chunk_param)
 
     jitter = rng.uniform(0.0, system.jitter, P)
-    speed = _thread_speeds(system, rng)
+    speed = _thread_speeds(system, rng, perturb)
     finish = jitter.copy()
 
     heap = [(jitter[i], i) for i in range(P)]
@@ -203,7 +226,8 @@ def _run_events(profile, system, alg_idx, chunk_param, rng, record_chunks):
             return float(lo + (pos - i) * (grid[i + 1] - lo))
 
     # pre-drawn lognormal noise (scalar Generator calls are ~3us each)
-    noise_buf = np.exp(rng.normal(0.0, system.noise_sigma, 4096))
+    sigma = system.noise_sigma * sigma_scale_of(perturb)
+    noise_buf = np.exp(rng.normal(0.0, sigma, 4096))
     noise_i = 0
 
     cursor = 0
@@ -233,7 +257,7 @@ def _run_events(profile, system, alg_idx, chunk_param, rng, record_chunks):
             loc = base_infl + amp * c_loc / (c + c_loc)
         raw = pref(b) - pref(a)
         if noise_i >= 4096:
-            noise_buf = np.exp(rng.normal(0.0, system.noise_sigma, 4096))
+            noise_buf = np.exp(rng.normal(0.0, sigma, 4096))
             noise_i = 0
         exec_t = raw * loc * speed[pe] * noise_buf[noise_i] + bcost
         noise_i += 1
@@ -285,9 +309,11 @@ class PythonBackend(SimBackend):
     name = "python"
 
     def run_instance(self, profile, system, alg: int, chunk_param: int,
-                     rng, record_chunks: bool = False) -> InstanceResult:
+                     rng, record_chunks: bool = False,
+                     perturb: Optional[InstancePerturb] = None
+                     ) -> InstanceResult:
         return run_instance(profile, system, alg, chunk_param, rng,
-                            record_chunks)
+                            record_chunks, perturb)
 
     def run_batch(self, profiles: Sequence, system,
                   specs: Sequence[InstanceSpec]) -> BatchResult:
@@ -298,7 +324,7 @@ class PythonBackend(SimBackend):
         for i, s in enumerate(specs):
             rng = np.random.default_rng(s.seed)
             r = run_instance(profiles[s.profile_id], system, s.alg,
-                             s.chunk_param, rng)
+                             s.chunk_param, rng, perturb=s.perturb)
             lt[i], lib[i], nc[i] = r.loop_time, r.lib, r.n_chunks
         return BatchResult(loop_time=lt, lib=lib, n_chunks=nc)
 

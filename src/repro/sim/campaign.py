@@ -53,7 +53,10 @@ def _lane_digest(selector: str, reward: Optional[str]) -> int:
 from ..core import (ALGORITHM_NAMES, N_ALGORITHMS, SelectionService,
                     coefficient_of_variation, exp_chunk, is_sim_policy)
 from ..core.api import Observation
-from .backends import InstanceSpec, LockstepRequest, get_backend
+from ..core.simpolicy import _SIM_ALIASES
+from .backends import (InstancePerturb, InstanceSpec, LockstepRequest,
+                       get_backend)
+from .perturb import PerturbationSpec
 from .whatif import LoopWhatIf
 from .systems import SYSTEMS, SystemModel, get_system
 from .workloads import APPLICATIONS, Application, get_application
@@ -233,7 +236,10 @@ def _lane_service(app: Application, selector: str, reward: Optional[str],
             for li, nm in enumerate(app.loop_names)}), None
     if is_sim_policy(selector):
         assert system is not None, "sim-assisted lanes need a machine model"
-        whatif = LoopWhatIf(system, backend=sim_backend)
+        # AwareSim lanes price through the two-pass adaptive surrogate
+        # (clean pass → weight re-estimation → perturbed pass)
+        two_pass = _SIM_ALIASES.get(selector.lower()) == "AwareSim"
+        whatif = LoopWhatIf(system, backend=sim_backend, two_pass=two_pass)
         return SelectionService(selector, reward=reward, seed=seed,
                                 simulator=whatif), whatif
     return SelectionService(selector, reward=reward, seed=seed), None
@@ -254,7 +260,9 @@ def run_selector_sequential(app_name: str, system_name: str, selector: str,
                             reward: Optional[str] = None,
                             T: Optional[int] = None, seed: int = 0,
                             sweep: Optional[PortfolioSweep] = None,
-                            backend=None, sim_backend=None) -> SelectorRun:
+                            backend=None, sim_backend=None,
+                            perturb: Optional[PerturbationSpec] = None
+                            ) -> SelectorRun:
     """Reference replay: one cell, one instance at a time.
 
     This is the historical ``run_selector`` loop, kept as the
@@ -274,17 +282,20 @@ def run_selector_sequential(app_name: str, system_name: str, selector: str,
     rng = _lane_rng(app_name, system, selector, chunk_mode, reward, seed)
     total = 0.0
     for t in range(T):
-        for li, profile in enumerate(app.loops(t)):
+        ip = None if perturb is None else perturb.instance_perturb(t,
+                                                                   system.P)
+        loops = app.loops(t) if perturb is None else perturb.loops(app, t)
+        for li, profile in enumerate(loops):
             nm = app.loop_names[li]
             cp = chunk_param_for(chunk_mode, profile.N, system.P)
             if whatif is not None:      # bind the loop the decision is about
-                whatif.set_context(profile, cp)
+                whatif.set_context(profile, cp, perturb=ip)
             with service.instance(nm) as inst:
                 # a policy may steer the chunk parameter; the campaign's
                 # chunk mode fills the default
                 d = inst.decision.with_instance_defaults(cp)
                 res = bk.run_instance(profile, system, d.action,
-                                      d.chunk_param, rng)
+                                      d.chunk_param, rng, perturb=ip)
                 inst.report(loop_time=res.loop_time, lib=res.lib)
             total += res.loop_time
     # the service's per-region records ARE the selection traces
@@ -301,13 +312,17 @@ def run_selector_sequential(app_name: str, system_name: str, selector: str,
 @dataclass(frozen=True)
 class CellSpec:
     """One replay lane of the factorial campaign: which application on which
-    system, driven by which selection method."""
+    system, driven by which selection method.  ``perturb`` makes the lane
+    non-stationary (``repro.sim.perturb``); it is deliberately NOT part of
+    the lane's rng identity, so a perturbed lane consumes the exact noise
+    stream of its clean twin (paired comparisons by construction)."""
 
     app: str
     system: str
     selector: str
     chunk_mode: str = "default"
     reward: Optional[str] = None
+    perturb: Optional[PerturbationSpec] = None
 
     @property
     def key(self) -> Tuple[str, str, Optional[str]]:
@@ -320,7 +335,7 @@ class _Lane:
     private noise stream, and the running total."""
 
     __slots__ = ("spec", "app", "system", "T", "service", "whatif", "rng",
-                 "total")
+                 "total", "_ip_cache")
 
     def __init__(self, spec: CellSpec, app: Application, system: SystemModel,
                  T: int, seed: int, sweep: Optional[PortfolioSweep],
@@ -335,6 +350,19 @@ class _Lane:
         self.rng = _lane_rng(spec.app, system, spec.selector,
                              spec.chunk_mode, spec.reward, seed)
         self.total = 0.0
+        self._ip_cache: Dict[int, Optional[InstancePerturb]] = {}
+
+    def perturb_at(self, t: int) -> Optional[InstancePerturb]:
+        """The lane's resolved execution-side perturbation at step ``t``
+        (memoized — every loop of the step shares one resolution)."""
+        if self.spec.perturb is None:
+            return None
+        ip = self._ip_cache.get(t, False)
+        if ip is False:
+            ip = self.spec.perturb.instance_perturb(t, self.system.P)
+            self._ip_cache.clear()      # only the current step is ever hot
+            self._ip_cache[t] = ip
+        return ip
 
     def result(self) -> SelectorRun:
         history = {nm: list(self.service.history(nm))
@@ -353,17 +381,20 @@ class _StepGroup:
     def __init__(self, system: SystemModel):
         self.system = system
         self.profiles: List = []
-        self._pids: Dict[str, List[int]] = {}
+        self._pids: Dict[Tuple, List[int]] = {}
         self.requests: List[LockstepRequest] = []
         self.pending: List = []          # (lane, RegionInstance) per request
 
-    def register(self, app_name: str, loops) -> List[int]:
-        pids = self._pids.get(app_name)
+    def register(self, key: Tuple, loops) -> List[int]:
+        """Share profile rows between lanes with identical loop content —
+        keyed on (app name, active drift), so a drifted lane never aliases
+        its clean sibling's profiles."""
+        pids = self._pids.get(key)
         if pids is None:
             pids = list(range(len(self.profiles),
                               len(self.profiles) + len(loops)))
             self.profiles.extend(loops)
-            self._pids[app_name] = pids
+            self._pids[key] = pids
         return pids
 
 
@@ -416,15 +447,19 @@ class ReplayBatch:
         self._apps = apps
         self.T_max = max((lane.T for lane in self.lanes), default=0)
 
-    def _loops(self, cache: Dict[str, List], app_name: str, t: int) -> List:
-        loops = cache.get(app_name)
+    def _loops(self, cache: Dict[Tuple, List], app_name: str, t: int,
+               drift: Optional[PerturbationSpec] = None) -> List:
+        key = (app_name, drift)
+        loops = cache.get(key)
         if loops is None:
-            loops = cache[app_name] = self._apps[app_name].loops(t)
+            app = self._apps[app_name]
+            loops = cache[key] = (app.loops(t) if drift is None
+                                  else drift.loops(app, t))
         return loops
 
     def step(self, t: int) -> None:
         """One decide / execute / learn cycle over all active lanes."""
-        loops_cache: Dict[str, List] = {}
+        loops_cache: Dict[Tuple, List] = {}
         groups: Dict[str, _StepGroup] = {}
         for lane in self.lanes:                               # decide
             if t >= lane.T:
@@ -432,18 +467,21 @@ class ReplayBatch:
             g = groups.get(lane.spec.system)
             if g is None:
                 g = groups[lane.spec.system] = _StepGroup(lane.system)
-            loops = self._loops(loops_cache, lane.spec.app, t)
-            pids = g.register(lane.spec.app, loops)
+            pz = lane.spec.perturb
+            drift = pz if (pz is not None and pz.has_drift) else None
+            ip = lane.perturb_at(t)
+            loops = self._loops(loops_cache, lane.spec.app, t, drift)
+            pids = g.register((lane.spec.app, drift), loops)
             for li, profile in enumerate(loops):
                 cp = chunk_param_for(lane.spec.chunk_mode, profile.N,
                                      lane.system.P)
                 if lane.whatif is not None:
-                    lane.whatif.set_context(profile, cp)
+                    lane.whatif.set_context(profile, cp, perturb=ip)
                 inst = lane.service.instance(lane.app.loop_names[li])
                 d = inst.decision.with_instance_defaults(cp)
                 g.requests.append(LockstepRequest(
                     profile_id=pids[li], alg=d.action,
-                    chunk_param=d.chunk_param, rng=lane.rng))
+                    chunk_param=d.chunk_param, rng=lane.rng, perturb=ip))
                 g.pending.append((lane, inst))
         for g in groups.values():                             # execute
             res = self.bk.run_lockstep(g.profiles, g.system, g.requests)
@@ -464,7 +502,8 @@ def run_selector(app_name: str, system_name: str, selector: str,
                  chunk_mode: str = "default", reward: Optional[str] = None,
                  T: Optional[int] = None, seed: int = 0,
                  sweep: Optional[PortfolioSweep] = None,
-                 backend=None, sim_backend=None) -> SelectorRun:
+                 backend=None, sim_backend=None,
+                 perturb: Optional[PerturbationSpec] = None) -> SelectorRun:
     """Execute one selection method over the full time-stepped application.
 
     Every modified loop gets an independent policy via ``SelectionService``
@@ -475,7 +514,7 @@ def run_selector(app_name: str, system_name: str, selector: str,
     (``run_selector_sequential``); batch many cells through ``ReplayBatch``
     or ``run_campaign`` to amortize the backend calls across lanes."""
     spec = CellSpec(app=app_name, system=system_name, selector=selector,
-                    chunk_mode=chunk_mode, reward=reward)
+                    chunk_mode=chunk_mode, reward=reward, perturb=perturb)
     sweeps = {(app_name, system_name): sweep} if sweep is not None else None
     return ReplayBatch([spec], T=T, seed=seed, sweeps=sweeps,
                        backend=backend, sim_backend=sim_backend).run()[0]

@@ -18,7 +18,9 @@ behavior (claims C1-C8 in DESIGN.md), not exact seconds:
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
+from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -37,6 +39,22 @@ class SystemModel:
     noise_sigma: float
     jitter: float             # s, max arrival offset
     speed_spread: float       # persistent per-thread speed variation (fraction)
+    pe_speeds: Optional[Tuple[float, ...]] = None
+                              # per-PE execution-time multipliers for
+                              # *persistently* heterogeneous machines
+                              # (big.LITTLE-style); None = homogeneous.
+                              # 1.0 nominal, > 1 slower.  Composed with any
+                              # instance perturbation by the backends.
+
+    def __post_init__(self):
+        if self.pe_speeds is not None:
+            speeds = tuple(float(x) for x in self.pe_speeds)
+            if len(speeds) != self.P:
+                raise ValueError(
+                    f"pe_speeds has {len(speeds)} entries for P={self.P}")
+            if any(x <= 0.0 for x in speeds):
+                raise ValueError("pe_speeds must be positive multipliers")
+            object.__setattr__(self, "pe_speeds", speeds)
 
     def chunk_inflation(self, locality_sens: float, c: float,
                         c_loc: float) -> float:
@@ -67,5 +85,42 @@ EPYC = SystemModel(
 SYSTEMS = {s.name: s for s in (BROADWELL, CASCADE_LAKE, EPYC)}
 
 
+def hetero_system(base: SystemModel, name: str,
+                  pe_speeds: Tuple[float, ...]) -> SystemModel:
+    """A synthetic heterogeneous machine derived from one of the paper's
+    systems: same overhead/noise constants, but per-PE execution-time
+    multipliers (1.0 nominal, > 1 slower)."""
+    return dataclasses.replace(base, name=name,
+                               pe_speeds=tuple(pe_speeds))
+
+
+def _big_little(base: SystemModel, name: str, frac_little: float,
+                little_factor: float) -> SystemModel:
+    k = max(1, int(round(base.P * frac_little)))
+    speeds = (1.0,) * (base.P - k) + (float(little_factor),) * k
+    return hetero_system(base, name, speeds)
+
+
+#: Synthetic heterogeneous machines beyond the paper's three (kept out of
+#: ``SYSTEMS`` so figure pipelines iterating the paper's machine set are
+#: untouched).  "big.LITTLE" quarters: last 25% of PEs run slower.
+HETERO_SYSTEMS = {
+    s.name: s for s in (
+        _big_little(BROADWELL, "broadwell_het", 0.25, 2.0),
+        _big_little(CASCADE_LAKE, "cascadelake_het", 0.25, 3.0),
+        _big_little(EPYC, "epyc_het", 0.25, 4.0),
+    )
+}
+
+
 def get_system(name: str) -> SystemModel:
-    return SYSTEMS[name]
+    try:
+        return SYSTEMS[name]
+    except KeyError:
+        pass
+    try:
+        return HETERO_SYSTEMS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown system {name!r}; known: "
+            f"{sorted(SYSTEMS) + sorted(HETERO_SYSTEMS)}") from None

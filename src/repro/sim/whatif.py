@@ -11,6 +11,16 @@ noise-free cells (test-enforced on both backends).
 Pricing never touches the lane's live rng stream: candidate runs draw from a
 fixed stateless seed, so wiring a ``SimPolicy`` lane into a lockstep replay
 leaves every other lane — and the lane's own noise trajectory — bit-exact.
+
+Perturbation awareness: ``set_context`` also accepts the step's resolved
+:class:`~repro.sim.backends.base.InstancePerturb`.  The default pricer stays
+deliberately BLIND to it — a surrogate is calibrated against the nominal
+machine, and unannounced perturbations are exactly the drift the reactive
+policies must detect from live feedback.  With ``two_pass=True`` the pricer
+runs the two-pass adaptive-surrogate scheme instead: a clean pass first
+(kept in :attr:`last_clean` — the AWF/mAF weight re-estimation baseline),
+then a perturbed re-simulation whose prices are returned (the ``AwareSim``
+lane wiring).
 """
 
 from __future__ import annotations
@@ -22,7 +32,7 @@ from typing import List, Optional, Sequence
 from ..core import exp_chunk
 from ..core.api import Observation
 from ..core.simpolicy import Candidate, SimUnavailable
-from .backends import InstanceSpec, get_backend
+from .backends import InstancePerturb, InstanceSpec, get_backend
 from .workloads import profile_digest
 
 #: constant stateless seed for candidate pricing runs (the noise-free system
@@ -36,7 +46,8 @@ _CACHE_SIZE = 512
 
 def noise_free(system):
     """The deterministic twin of a machine model: same dispatch overheads and
-    locality costs, zero stochastic terms."""
+    locality costs, zero stochastic terms (persistent ``pe_speeds``
+    heterogeneity is *kept* — it is structure, not noise)."""
     return dataclasses.replace(system, noise_sigma=0.0, jitter=0.0,
                                speed_spread=0.0)
 
@@ -45,24 +56,34 @@ class LoopWhatIf:
     """Prices ``SimPolicy`` candidates for DES loop instances.
 
     One instance serves a whole replay lane: the lane re-binds the current
-    loop with ``set_context(profile, chunk_param)`` before each decision and
-    every candidate is evaluated against that context.  ``backend`` is any
-    ``get_backend`` name/instance (the lane's ``sim_backend``); with the
-    batched JAX engine the full candidate set is one vmapped call.
+    loop with ``set_context(profile, chunk_param, perturb)`` before each
+    decision and every candidate is evaluated against that context.
+    ``backend`` is any ``get_backend`` name/instance (the lane's
+    ``sim_backend``); with the batched JAX engine the full candidate set is
+    one vmapped call.
     """
 
-    def __init__(self, system, backend=None, deterministic: bool = True):
+    def __init__(self, system, backend=None, deterministic: bool = True,
+                 two_pass: bool = False):
         self.bk = get_backend(backend)
         self.system = noise_free(system) if deterministic else system
+        self.two_pass = bool(two_pass)
         self._profile = None
         self._chunk_param = 0
+        self._perturb: Optional[InstancePerturb] = None
+        #: clean-pass prices from the last two-pass ``price`` call (the
+        #: adaptive-surrogate baseline); None outside two-pass operation
+        self.last_clean: Optional[List[Observation]] = None
         self._cache: "OrderedDict[tuple, List[Observation]]" = OrderedDict()
 
     # -- context ------------------------------------------------------------
-    def set_context(self, profile, chunk_param: int = 0) -> None:
+    def set_context(self, profile, chunk_param: int = 0,
+                    perturb: Optional[InstancePerturb] = None) -> None:
         """Bind the loop instance the next ``price`` calls are about."""
         self._profile = profile
         self._chunk_param = int(chunk_param)
+        self._perturb = None if (perturb is not None
+                                 and perturb.neutral) else perturb
 
     # -- the candidate-simulator protocol -----------------------------------
     def candidates(self) -> List[Candidate]:
@@ -78,26 +99,21 @@ class LoopWhatIf:
             out += [Candidate(a, ec) for a in range(N_ALGORITHMS)]
         return out
 
-    def price(self, cands: Sequence[Candidate]) -> List[Observation]:
-        """Predicted (loop_time, lib) per candidate via one batched
-        noise-free ``run_batch`` on the configured backend."""
-        if self._profile is None:
-            raise SimUnavailable("LoopWhatIf has no loop context bound")
-        p = self._profile
-        resolved = tuple(
-            (c.alg, self._chunk_param if c.chunk_param is None
-             else int(c.chunk_param)) for c in cands)
+    def _priced(self, p, resolved, perturb: Optional[InstancePerturb]
+                ) -> List[Observation]:
         # profile_digest covers the prefix-grid *content* — mean-normalized
         # patterns share N*unit totals across time steps, so cheap fields
-        # alone would alias genuinely different load distributions
+        # alone would alias genuinely different load distributions.  The
+        # perturbation key keeps perturbed prices from aliasing clean ones.
         key = (p.name, profile_digest(p), p.unit, p.memory_bound,
-               p.locality_sens, p.c_loc, resolved)
+               p.locality_sens, p.c_loc, resolved,
+               None if perturb is None else perturb.key())
         hit = self._cache.get(key)
         if hit is not None:
             self._cache.move_to_end(key)
             return hit
         specs = [InstanceSpec(profile_id=0, alg=a, chunk_param=cp,
-                              seed=_PRICE_SEED + (a, cp))
+                              seed=_PRICE_SEED + (a, cp), perturb=perturb)
                  for a, cp in resolved]
         res = self.bk.run_batch([p], self.system, specs)
         out = [Observation(loop_time=float(t), lib=float(b))
@@ -106,3 +122,26 @@ class LoopWhatIf:
         if len(self._cache) > _CACHE_SIZE:
             self._cache.popitem(last=False)
         return out
+
+    def price(self, cands: Sequence[Candidate]) -> List[Observation]:
+        """Predicted (loop_time, lib) per candidate via one batched
+        noise-free ``run_batch`` on the configured backend (two when
+        ``two_pass`` is on under an active perturbation)."""
+        if self._profile is None:
+            raise SimUnavailable("LoopWhatIf has no loop context bound")
+        p = self._profile
+        resolved = tuple(
+            (c.alg, self._chunk_param if c.chunk_param is None
+             else int(c.chunk_param)) for c in cands)
+        if self.two_pass and self._perturb is not None:
+            # two-pass adaptive surrogate: simulate clean, let the backend
+            # re-estimate the adaptive algorithms' per-PE weights from the
+            # perturbed speeds, re-simulate perturbed; the clean pass is the
+            # re-estimation baseline callers can diff against
+            self.last_clean = self._priced(p, resolved, None)
+            return self._priced(p, resolved, self._perturb)
+        # default pricer: BLIND to execution-side perturbations (a surrogate
+        # is calibrated against the nominal machine; unannounced slowdowns
+        # are exactly what the reactive policies must detect live)
+        self.last_clean = None
+        return self._priced(p, resolved, None)

@@ -226,10 +226,70 @@ def test_admission_queue_depth_backpressure():
     reqs = synthetic_requests(600, seed=0)
     deep = _view([np.full(4, 5.0)] * 2)     # 40s outstanding
     ac = AdmissionControl(wave_quota=128, queue_depth=0.1, min_admit=8)
-    # budget exhausted -> the min_admit floor keeps the queue draining
-    assert ac.admit(reqs, now=1.0, view=deep) == 8
+    # budget exhausted with work still outstanding -> the wave must be held
+    # at 0 (re-admitting min_admit here would defeat backpressure: the
+    # fleet drains, the k=0 wave reopens at the next replica-free instant)
+    assert ac.admit(reqs, now=1.0, view=deep) == 0
     idle = _view([np.zeros(4)] * 2)
     assert ac.admit(reqs, now=1.0, view=idle) > 8
+
+
+def test_admission_idle_floor_survives_zero_budget():
+    # nothing outstanding: even a zero queue-depth budget must admit the
+    # min_admit floor, or an idle fleet would never start draining
+    reqs = synthetic_requests(600, seed=0)
+    idle = _view([np.zeros(4)] * 2)
+    ac = AdmissionControl(wave_quota=128, queue_depth=1e-12, min_admit=8)
+    assert ac.admit(reqs, now=1.0, view=idle) == 8
+    assert ac.admit(reqs[:3], now=1.0, view=idle) == 3
+
+
+def test_admission_p95_weights_by_group_capacity():
+    reqs = synthetic_requests(600, seed=0, arrival_rate=1e6)
+    even = _view([np.zeros(4)] * 2)
+    ac = AdmissionControl(wave_quota=256, p95_slo=0.1, min_admit=8)
+    k_even = ac.admit(reqs, 0.01, even)
+    # same fleet, but one group at 10% capacity: the aggregate drain rate
+    # shrinks, so the predicted horizon forces a smaller wave
+    skew = _view([np.zeros(4)] * 2)
+    skew.capacity = np.array([1.0, 0.1])
+    k_skew = ac.admit(reqs, 0.01, skew)
+    assert k_skew < k_even
+    # explicit uniform capacity is bit-identical to None
+    unif = _view([np.zeros(4)] * 2)
+    unif.capacity = np.ones(2)
+    assert ac.admit(reqs, 0.01, unif) == k_even
+
+
+def test_fleet_zero_admit_run_completes():
+    # a queue_depth tight enough to zero out admissions mid-run must not
+    # livelock: the run loop advances to the next replica-free instant
+    trace = make_trace("poisson", 300, seed=3, rate=2000.0)
+    fleet = FleetSimulator(n_groups=2, replicas_per_group=4, router="rr",
+                           selector="ExpertSel",
+                           admission=AdmissionControl(
+                               wave_quota=64, queue_depth=0.02, min_admit=8))
+    rep = fleet.run(trace)
+    assert rep.n_requests == 300
+    assert sum(g["requests"] for g in rep.per_group) == 300
+
+
+def test_fleet_perturbed_group_shifts_routing():
+    from repro.sim.perturb import FleetPerturb, GroupSlowdown
+    trace = make_trace("poisson", 240, seed=5, rate=600.0)
+    pz = FleetPerturb(events=(GroupSlowdown(group=0, factor=6.0),))
+    work = {}
+    for router in ("rr", "whatif"):
+        fleet = FleetSimulator(n_groups=2, replicas_per_group=4,
+                               router=router, selector="ExpertSel",
+                               perturb=pz)
+        rep = fleet.run(trace)
+        assert rep.n_requests == 240
+        # nominal (pre-slowdown) work landed on the slow group
+        work[router] = rep.per_group[0]["busy_s"] / 6.0
+    # the capacity-aware what-if router moves load off the slowed group;
+    # round-robin splits blindly
+    assert work["whatif"] < work["rr"]
 
 
 def test_admission_p95_slo_halves_waves():

@@ -1,0 +1,491 @@
+"""Perturbation & drift injection layer (repro.sim.perturb) and the
+reactive re-pricing policies built on it.
+
+Covers, per ISSUE 8:
+- bit-equality by construction: neutral perturbations are exact no-ops on
+  both backends, and enabling a perturbation on one lane never shifts any
+  other lane's noise stream (fold seeds exclude the perturbation);
+- the injected physics: PE slowdowns hurt STATIC far more than dynamic
+  scheduling, failed PEs are routed around, noise bursts inflate sigma,
+  workload drift transforms loop profiles (N / cov / phase);
+- synthetic heterogeneous systems (SystemModel.pe_speeds + registry);
+- schedule-cache hygiene under perturbation (weighted 5-tuple keys never
+  collide with clean 4-tuple entries);
+- blind vs two-pass-aware candidate pricing (LoopWhatIf);
+- the PageHinkley drift detector and the reactive policies: ReactiveSim's
+  EMA fidelity corrections beat frozen SimPolicy on a perturbed cell, and
+  ReactiveHybrid re-prunes its RL window when the reward stream shifts.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import PageHinkley, make_policy
+from repro.core.api import Observation
+from repro.core.jaxsched import ADAPTIVE_SCHEDULABLE, weighted_adaptive_schedule
+from repro.core.simpolicy import Candidate, SimAssistedHybrid
+from repro.sim import (CellSpec, HETERO_SYSTEMS, InstancePerturb, LoopWhatIf,
+                       NoiseBurst, PEFailure, PESlowdown, PerturbationSpec,
+                       ReplayBatch, SYSTEMS, WorkloadDrift, drift_spec,
+                       get_application, get_system, hetero_system,
+                       noise_burst_spec, pe_slowdown_spec, run_selector,
+                       run_selector_sequential)
+from repro.sim.backends import InstanceSpec, get_backend
+from repro.sim.backends.base import combined_pe_scale, sigma_scale_of
+from repro.sim.backends.jax_batched import (ADAPTIVE_REWEIGHT_ENV,
+                                            JaxBatchedBackend,
+                                            resolve_adaptive_reweight)
+from repro.sim.workloads import profile_digest
+
+BACKENDS = ["python", "jax"]
+
+
+def _slow(P, k=4, factor=8.0):
+    return InstancePerturb(pe_scale=tuple([1.0] * (P - k) + [factor] * k))
+
+
+# ---------------------------------------------------------------------------
+# InstancePerturb / PerturbationSpec resolution
+# ---------------------------------------------------------------------------
+
+def test_instance_perturb_neutral_and_key():
+    assert InstancePerturb().neutral
+    assert InstancePerturb(pe_scale=(1.0, 1.0), sigma_scale=1.0).neutral
+    p = InstancePerturb(pe_scale=(1.0, 2.0))
+    assert not p.neutral
+    assert p.key() == ((1.0, 2.0), 1.0)
+    assert p.key() != InstancePerturb().key()
+
+
+def test_combined_pe_scale_composes_system_and_perturb():
+    base = get_system("broadwell")
+    assert combined_pe_scale(base, None) is None
+    het = hetero_system(base, "t", (1.0,) * 16 + (2.0,) * 4)
+    s = combined_pe_scale(het, None)
+    assert s is not None and s[-1] == 2.0
+    both = combined_pe_scale(het, _slow(20, k=4, factor=3.0))
+    assert both[-1] == 6.0 and both[0] == 1.0
+    assert sigma_scale_of(None) == 1.0
+    assert sigma_scale_of(InstancePerturb(sigma_scale=2.5)) == 2.5
+
+
+def test_perturbation_spec_windows_and_resolution():
+    spec = PerturbationSpec(
+        slowdowns=(PESlowdown(pes=(0,), factor=4.0, t0=2, t1=5),),
+        noise_bursts=(NoiseBurst(factor=3.0, t0=4),))
+    assert spec.instance_perturb(0, 8) is None
+    ip = spec.instance_perturb(2, 8)
+    assert ip.pe_scale[0] == 4.0 and ip.sigma_scale == 1.0
+    ip = spec.instance_perturb(4, 8)          # both windows active
+    assert ip.pe_scale[0] == 4.0 and ip.sigma_scale == 3.0
+    ip = spec.instance_perturb(5, 8)          # slowdown window closed
+    assert ip.pe_scale is None and ip.sigma_scale == 3.0
+    with pytest.raises(ValueError):
+        WorkloadDrift(kind="entropy")
+
+
+# ---------------------------------------------------------------------------
+# backend injection: bit-equality + physics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_neutral_perturb_bit_equal(backend):
+    bk = get_backend(backend)
+    system = get_system("broadwell")
+    p = get_application("hacc").loops(0)[0]
+    algs = (1, 2, 4, 5, 7, 11)
+    clean = bk.run_batch([p], system,
+                         [InstanceSpec(0, a, 0, (9, a)) for a in algs])
+    neut = bk.run_batch(
+        [p], system,
+        [InstanceSpec(0, a, 0, (9, a), perturb=InstancePerturb())
+         for a in algs])
+    assert np.array_equal(clean.loop_time, neut.loop_time)
+    assert np.array_equal(clean.lib, neut.lib)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_pe_slowdown_hurts_static_more_than_dynamic(backend):
+    bk = get_backend(backend)
+    system = get_system("broadwell")
+    p = get_application("hacc").loops(0)[0]
+    ip = _slow(system.P, k=4, factor=8.0)
+
+    def t(alg, perturb):
+        spec = InstanceSpec(0, alg, 0, (11, alg), perturb=perturb)
+        return float(bk.run_batch([p], system, [spec]).loop_time[0])
+
+    static_ratio = t(0, ip) / t(0, None)
+    ss_ratio = t(1, ip) / t(1, None)
+    steal_ratio = t(5, ip) / t(5, None)
+    # STATIC is stuck with its pre-assigned ranges on the slow PEs;
+    # self-scheduling (chunk-of-1) and work stealing route around them
+    assert static_ratio > 4.0
+    assert ss_ratio < 0.25 * static_ratio
+    assert steal_ratio < 0.25 * static_ratio
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_pe_failure_is_routed_around_by_dynamic(backend):
+    bk = get_backend(backend)
+    system = get_system("broadwell")
+    p = get_application("hacc").loops(0)[0]
+    spec = PerturbationSpec(failures=(PEFailure(pes=(18, 19)),))
+    ip = spec.instance_perturb(0, system.P)
+
+    def t(alg, perturb):
+        s = InstanceSpec(0, alg, 0, (13, alg), perturb=perturb)
+        return float(bk.run_batch([p], system, [s]).loop_time[0])
+
+    # dead PEs make STATIC astronomically slow; chunk-of-1 self-scheduling
+    # degrades gracefully (loses 2 of 20 PEs plus one stranded iteration)
+    assert t(0, ip) > 100.0 * t(0, None)
+    assert t(1, ip) < 2.0 * t(1, None)
+    assert t(5, ip) < 2.0 * t(5, None)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_noise_burst_inflates_sigma(backend):
+    bk = get_backend(backend)
+    system = get_system("broadwell")
+    p = get_application("hacc").loops(0)[0]
+    burst = InstancePerturb(sigma_scale=8.0)
+
+    def run(perturb, n=6):
+        specs = [InstanceSpec(0, 2, 0, (17, i), perturb=perturb)
+                 for i in range(n)]
+        return bk.run_batch([p], system, specs).loop_time
+
+    clean = run(None)
+    noisy = run(burst)
+    assert not np.array_equal(clean, noisy)
+    # the burst only widens the noise term: dispersion across seeds grows
+    assert noisy.std() > clean.std()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_seed_stream_isolation_across_lanes(backend):
+    """Perturbing lane A must not shift lane B's draws: the fold seed
+    excludes the perturbation, so B is bit-identical in both batches."""
+    bk = get_backend(backend)
+    system = get_system("broadwell")
+    p = get_application("hacc").loops(0)[0]
+    ip = _slow(system.P)
+    a_clean = InstanceSpec(0, 2, 0, (23, 0))
+    b_clean = InstanceSpec(0, 4, 0, (23, 1))
+    r0 = bk.run_batch([p], system, [a_clean, b_clean])
+    r1 = bk.run_batch([p], system,
+                      [dataclasses.replace(a_clean, perturb=ip), b_clean])
+    assert r1.loop_time[0] != r0.loop_time[0]      # A did change
+    assert r1.loop_time[1] == r0.loop_time[1]      # B bit-identical
+    assert r1.lib[1] == r0.lib[1]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_run_instance_perturb_kwarg(backend):
+    bk = get_backend(backend)
+    system = get_system("broadwell")
+    p = get_application("hacc").loops(0)[0]
+    r0 = bk.run_instance(p, system, 2, 0, np.random.default_rng(3))
+    r1 = bk.run_instance(p, system, 2, 0, np.random.default_rng(3),
+                         perturb=InstancePerturb())
+    assert r0.loop_time == r1.loop_time
+    r2 = bk.run_instance(p, system, 2, 0, np.random.default_rng(3),
+                         perturb=_slow(system.P))
+    assert r2.loop_time != r0.loop_time
+
+
+# ---------------------------------------------------------------------------
+# campaign wiring: lockstep == sequential, clean lanes unaffected
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_lockstep_matches_sequential_under_perturbation(backend):
+    pz = pe_slowdown_spec(20, frac=0.2, factor=6.0, t0=2)
+    kw = dict(T=6, seed=0, backend=backend)
+    seq = run_selector_sequential("hacc", "broadwell", "ExpertSel",
+                                  perturb=pz, **kw)
+    bat = run_selector("hacc", "broadwell", "ExpertSel", perturb=pz, **kw)
+    if backend == "python":
+        assert seq.total == bat.total
+        assert seq.history == bat.history
+    else:
+        # the repo's JAX equivalence contract (test_replay): identical
+        # selections, times to float32-accumulation tolerance
+        for nm in bat.history:
+            assert [h[0] for h in bat.history[nm]] == \
+                [h[0] for h in seq.history[nm]]
+            np.testing.assert_allclose(
+                [h[1] for h in bat.history[nm]],
+                [h[1] for h in seq.history[nm]], rtol=1e-6)
+        np.testing.assert_allclose(bat.total, seq.total, rtol=1e-6)
+
+
+def test_replaybatch_clean_lane_bit_equal_next_to_perturbed():
+    pz = pe_slowdown_spec(20, frac=0.2, factor=6.0, t0=0)
+    clean = CellSpec(app="hacc", system="broadwell", selector="ExpertSel")
+    pert = CellSpec(app="hacc", system="broadwell", selector="QLearn",
+                    reward="LT", perturb=pz)
+    solo = ReplayBatch([clean], T=6, seed=0, backend="python").run()[0]
+    both = ReplayBatch([clean, pert], T=6, seed=0, backend="python").run()
+    assert both[0].total == solo.total
+    assert both[0].history == solo.history
+    assert both[1].total != solo.total
+
+
+def test_drifted_lane_does_not_alias_clean_siblings_profiles():
+    """Two lanes on the same app, one drifted: the drifted lane must see
+    transformed profiles while the clean lane's run stays bit-equal."""
+    dz = drift_spec("N", t0=0, factor=2.0)
+    clean = CellSpec(app="tc", system="broadwell", selector="ExpertSel")
+    drifted = CellSpec(app="tc", system="broadwell", selector="ExpertSel",
+                       perturb=dz)
+    solo = ReplayBatch([clean], T=4, seed=0, backend="python").run()[0]
+    both = ReplayBatch([clean, drifted], T=4, seed=0, backend="python").run()
+    assert both[0].total == solo.total
+    assert both[1].total > 1.5 * solo.total       # doubled N
+
+
+# ---------------------------------------------------------------------------
+# workload drift transforms
+# ---------------------------------------------------------------------------
+
+def test_drift_n_scales_iterations_and_work():
+    app = get_application("tc")
+    base = app.loops(0)[0]
+    dl = drift_spec("N", t0=0, factor=2.0).loops(app, 0)[0]
+    assert dl.N == 2 * base.N
+    assert np.isclose(dl.total, 2.0 * base.total, rtol=1e-6)
+    # inactive before its window opens
+    assert drift_spec("N", t0=3, factor=2.0).loops(app, 0)[0].N == base.N
+
+
+def test_drift_cov_preserves_total_work():
+    app = get_application("tc")
+    base = app.loops(0)[0]
+    dl = drift_spec("cov", t0=0, factor=1.8).loops(app, 0)[0]
+    assert dl.N == base.N
+    assert np.isclose(dl.total, base.total, rtol=1e-9)
+    assert profile_digest(dl) != profile_digest(base)
+    dens0 = np.diff(base.prefix_grid)
+    dens1 = np.diff(dl.prefix_grid)
+    assert dens1.std() / dens1.mean() > dens0.std() / dens0.mean()
+
+
+def test_drift_phase_fast_forwards_the_app():
+    app = get_application("sphynx")       # time-varying loops
+    shifted = drift_spec("phase", t0=0, phase_shift=7).loops(app, 3)[0]
+    direct = app.loops(10)[0]
+    assert profile_digest(shifted) == profile_digest(direct)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous systems
+# ---------------------------------------------------------------------------
+
+def test_hetero_registry_and_validation():
+    assert set(SYSTEMS) == {"broadwell", "cascadelake", "epyc"}
+    for name, s in HETERO_SYSTEMS.items():
+        assert get_system(name) is s
+        assert len(s.pe_speeds) == s.P and max(s.pe_speeds) > 1.0
+    base = get_system("broadwell")
+    assert base.pe_speeds is None
+    with pytest.raises(ValueError):
+        hetero_system(base, "bad", (1.0,) * 3)
+    with pytest.raises(ValueError):
+        hetero_system(base, "bad", (0.0,) * base.P)
+    with pytest.raises(KeyError, match="unknown system"):
+        get_system("m1_ultra")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_hetero_system_changes_execution(backend):
+    bk = get_backend(backend)
+    p = get_application("hacc").loops(0)[0]
+    base = get_system("broadwell")
+    het = get_system("broadwell_het")
+    spec = [InstanceSpec(0, 0, 0, (29,))]
+    t_base = float(bk.run_batch([p], base, spec).loop_time[0])
+    t_het = float(bk.run_batch([p], het, spec).loop_time[0])
+    assert t_het > 1.2 * t_base
+
+
+# ---------------------------------------------------------------------------
+# weighted adaptive schedules + cache hygiene
+# ---------------------------------------------------------------------------
+
+def test_weighted_adaptive_schedule_covers_all_iterations():
+    P = 8
+    w = np.ones(P)
+    w[-2:] = 0.25               # two PEs at quarter speed
+    w *= P / w.sum()
+    for alg in sorted(ADAPTIVE_SCHEDULABLE):
+        sizes, pes = weighted_adaptive_schedule(alg, 10_000, P, 0, w)
+        assert sizes.sum() == 10_000
+        assert sizes.min() >= 1
+        assert pes.min() >= 0 and pes.max() < P
+        # slow PEs get less work than fast ones
+        work = np.bincount(pes, weights=sizes, minlength=P)
+        assert work[-1] < work[0]
+    with pytest.raises(ValueError):
+        weighted_adaptive_schedule(2, 100, P, 0, w)
+
+
+def test_sched_cache_clean_entries_survive_weighted_runs():
+    """A perturbed (weighted) schedule must never poison the clean cache
+    entry for the same (alg, N, P, cp): re-running the clean spec after a
+    perturbed one is bit-identical to the first clean run."""
+    bk = JaxBatchedBackend()
+    system = get_system("broadwell")
+    p = get_application("hacc").loops(0)[0]
+    clean = [InstanceSpec(0, a, 0, (31, a)) for a in (7, 11)]
+    pert = [InstanceSpec(0, a, 0, (31, a), perturb=_slow(system.P))
+            for a in (7, 11)]
+    r0 = bk.run_batch([p], system, clean)
+    rp = bk.run_batch([p], system, pert)
+    r1 = bk.run_batch([p], system, clean)
+    assert np.array_equal(r0.loop_time, r1.loop_time)
+    assert np.array_equal(r0.lib, r1.lib)
+    assert not np.array_equal(rp.loop_time, r0.loop_time)
+
+
+def test_adaptive_reweight_resolution(monkeypatch):
+    monkeypatch.delenv(ADAPTIVE_REWEIGHT_ENV, raising=False)
+    assert resolve_adaptive_reweight() is True
+    monkeypatch.setenv(ADAPTIVE_REWEIGHT_ENV, "0")
+    assert resolve_adaptive_reweight() is False
+    assert resolve_adaptive_reweight(True) is True
+    monkeypatch.setenv(ADAPTIVE_REWEIGHT_ENV, "1")
+    assert resolve_adaptive_reweight(False) is False
+
+
+def test_adaptive_reweight_moves_work_off_slow_pes():
+    """With reweighting the adaptive surrogate assigns slow PEs smaller
+    chunks (LB4OMP's measured-weights behavior); frozen schedules pay the
+    full slowdown on the critical path."""
+    system = get_system("broadwell")
+    p = get_application("hacc").loops(0)[0]
+    ip = _slow(system.P, k=4, factor=8.0)
+    spec = [InstanceSpec(0, 11, 0, (37,), perturb=ip)]
+    on = JaxBatchedBackend(adaptive_reweight=True)
+    off = JaxBatchedBackend(adaptive_reweight=False)
+    t_on = float(on.run_batch([p], system, spec).loop_time[0])
+    t_off = float(off.run_batch([p], system, spec).loop_time[0])
+    assert t_on < 0.75 * t_off
+
+
+# ---------------------------------------------------------------------------
+# candidate pricing: blind by default, aware under two_pass
+# ---------------------------------------------------------------------------
+
+def test_whatif_blind_vs_two_pass_aware_pricing():
+    system = get_system("broadwell")
+    p = get_application("hacc").loops(0)[0]
+    cands = [Candidate(a) for a in range(12)]
+    ip = _slow(system.P)
+
+    blind = LoopWhatIf(system, backend="python")
+    blind.set_context(p, 0)
+    clean_prices = [o.loop_time for o in blind.price(cands)]
+    blind.set_context(p, 0, perturb=ip)
+    assert [o.loop_time for o in blind.price(cands)] == clean_prices
+    assert blind.last_clean is None
+
+    aware = LoopWhatIf(system, backend="python", two_pass=True)
+    aware.set_context(p, 0, perturb=ip)
+    aware_prices = [o.loop_time for o in aware.price(cands)]
+    assert aware_prices != clean_prices
+    assert [o.loop_time for o in aware.last_clean] == clean_prices
+    # perturbed entries live under their own cache key: rebinding the clean
+    # context returns the original prices bit-for-bit
+    aware.set_context(p, 0)
+    assert [o.loop_time for o in aware.price(cands)] == clean_prices
+    # a neutral perturbation is dropped at set_context time
+    aware.set_context(p, 0, perturb=InstancePerturb())
+    assert aware._perturb is None
+
+
+# ---------------------------------------------------------------------------
+# drift detection + reactive policies
+# ---------------------------------------------------------------------------
+
+def test_page_hinkley_detects_shift_not_stationary():
+    det = PageHinkley(delta=0.05, threshold=0.6, min_obs=8)
+    rng = np.random.default_rng(0)
+    fired = [det.update(x) for x in rng.normal(1.0, 0.05, 200)]
+    assert not any(fired)
+    assert any(det.update(x) for x in rng.normal(3.0, 0.05, 20))
+    assert det.n_detections == 1
+    # reset-on-detect: the mean re-learns at the new level, and the detector
+    # re-arms for the next shift (downward this time)
+    for x in rng.normal(3.0, 0.05, 40):
+        det.update(x)
+    assert det.n_detections == 1          # stationary again: no false alarm
+    assert any(det.update(x) for x in rng.normal(0.2, 0.05, 40))
+    assert det.n_detections == 2
+
+
+def test_reactive_sim_beats_frozen_on_perturbed_cell():
+    pz = pe_slowdown_spec(20, frac=0.2, factor=8.0, t0=10)
+    kw = dict(T=40, seed=0, backend="python", reward="LT")
+    frozen = run_selector("hacc", "broadwell", "SimPolicy", perturb=pz, **kw)
+    reactive = run_selector("hacc", "broadwell", "ReactiveSim", perturb=pz,
+                            **kw)
+    aware = run_selector("hacc", "broadwell", "AwareSim", perturb=pz, **kw)
+    assert reactive.total < 0.9 * frozen.total
+    assert aware.total < reactive.total
+    # on the clean cell the variants stay within a few percent of each other
+    f0 = run_selector("hacc", "broadwell", "SimPolicy", **kw)
+    r0 = run_selector("hacc", "broadwell", "ReactiveSim", **kw)
+    assert abs(r0.total - f0.total) < 0.05 * f0.total
+
+
+class _StubPricer:
+    """Candidate simulator with externally mutable prices."""
+
+    def __init__(self, times):
+        self.times = np.asarray(times, float)
+
+    def price(self, cands):
+        return [Observation(loop_time=float(self.times[c.alg]))
+                for c in cands]
+
+
+def test_reactive_hybrid_reprunes_window_on_drift():
+    times = np.full(12, 1.0)
+    times[[2, 3]] = 0.1                   # initial predicted top-2
+    stub = _StubPricer(times)
+    h = SimAssistedHybrid(stub, top_k=2, expert_steps=1, reactive=True,
+                          reward="LT", n_actions=12)
+    assert h.name == "ReactiveHybrid"
+    # expert phase + 2x2 exploration, then stable exploitation
+    for _ in range(25):
+        d = h.decide()
+        h.feedback(d, Observation(loop_time=0.1, lib=1.0))
+    assert sorted(h.actions) == [2, 3]
+    assert h.drift_events == 0
+    # the world shifts: measured cost jumps AND the simulator now predicts
+    # a different top-2 — the detector must fire and re-prune mid-flight
+    stub.times = np.full(12, 1.0)
+    stub.times[[8, 9]] = 0.05
+    for _ in range(20):
+        d = h.decide()
+        h.feedback(d, Observation(loop_time=5.0, lib=1.0))
+        if h.drift_events:
+            break
+    assert h.drift_events >= 1
+    assert sorted(h.actions) == [8, 9]
+
+
+def test_reactive_policies_via_make_policy():
+    stub = _StubPricer(np.ones(12))
+    p = make_policy("reactivesim", simulator=stub)
+    assert p.name == "ReactiveSim" and p.reactive and p.detector is not None
+    q = make_policy("simpolicy", simulator=stub)
+    assert q.name == "SimPolicy" and not q.reactive and q.detector is None
+    r = make_policy("awaresim", simulator=stub)
+    assert r.name == "SimPolicy" and not r.reactive
+    s = make_policy("reactivehybrid", simulator=stub)
+    assert s.name == "ReactiveHybrid" and s.reactive
