@@ -18,6 +18,10 @@ backlog-bound and the comparison washes out.)
 total makespan and p95 latency on the bursty trace — at >=1M simulated
 requests on the ``slow`` tier, a reduced replica of the same regime on
 ``tier1``.  Everything is recorded to ``results/bench_fleet.json``.
+
+``bench_faults`` reuses this benchmark's fleet shape and bursty regime
+(``N_GROUPS``/``REPLICAS``/``WAVE_QUOTA``/``BURSTY``) for its fault
+injection, recovery-value, and crash-safe kill-resume gates.
 """
 
 from __future__ import annotations

@@ -18,6 +18,7 @@ Benches:
     simpolicy    §SimAS      simulation-assisted selection regret + latency
     perturb      §Perturb    reactive re-pricing vs frozen under perturbations
     fleet        §Fleet      trace-driven routing over replica groups
+    faults       §Faults     failure recovery value + crash-safe kill-resume
     shard        §Mesh       per-device-count scaling of the sharded lanes
 
 ``--smoke`` is the single CI entry point: it runs every registered smoke
@@ -48,6 +49,7 @@ SMOKE_GATES = {
     "serving": ("bench_serving", "tier1"),
     "perturb": ("bench_perturb", ("tier1", "slow")),
     "fleet": ("bench_fleet", ("tier1", "slow")),
+    "faults": ("bench_faults", ("tier1", "slow")),
     "replay": ("bench_replay", "slow"),
     "event_kernel": ("bench_event_kernel", "slow"),
     # its CI job boots with XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -124,8 +126,9 @@ def main() -> None:
 
     from . import (bench_anova, bench_autotune, bench_backends, bench_chunks,
                    bench_cov, bench_degradation, bench_event_kernel,
-                   bench_fleet, bench_perturb, bench_replay, bench_roofline,
-                   bench_serving, bench_shard, bench_simpolicy, bench_traces)
+                   bench_faults, bench_fleet, bench_perturb, bench_replay,
+                   bench_roofline, bench_serving, bench_shard,
+                   bench_simpolicy, bench_traces)
     benches = {
         "chunks": bench_chunks.main,
         "cov": bench_cov.main,
@@ -141,6 +144,7 @@ def main() -> None:
         "simpolicy": bench_simpolicy.main,
         "perturb": bench_perturb.main,
         "fleet": bench_fleet.main,
+        "faults": bench_faults.main,
         "shard": bench_shard.main,
     }
     if args.only:

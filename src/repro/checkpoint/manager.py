@@ -53,12 +53,19 @@ class CheckpointManager:
 
     # -- save ----------------------------------------------------------------
     def save(self, step: int, tree) -> str:
+        # join any in-flight async save first: a failure on the background
+        # thread must re-raise here, not vanish (and two writers must never
+        # race on the step directories / GC)
+        self.wait()
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
         return self._write(step, host_tree)
 
     def async_save(self, step: int, tree) -> None:
         """Device->host copy happens synchronously (consistent snapshot);
-        serialization + fsync + rename happen on a background thread."""
+        serialization + fsync + rename happen on a background thread.
+        An exception raised by the background write is re-raised by the
+        NEXT ``wait()`` / ``save()`` / ``async_save()`` call — callers that
+        never join again would otherwise lose checkpoints silently."""
         self.wait()
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
 

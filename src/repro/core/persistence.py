@@ -22,12 +22,41 @@ from __future__ import annotations
 import json
 import os
 import platform
+import warnings
 import zlib
 from typing import Dict, Optional
 
 import numpy as np
 
 from .agents import TabularAgent
+
+
+def _atomic_json_dump(record: Dict, path: str) -> None:
+    """Crash-safe JSON write: serialize to a ``.tmp`` sibling, fsync, and
+    ``os.replace`` into place — a kill mid-save can truncate only the temp
+    file, never a committed snapshot (so a warm-start store survives the
+    very crashes it exists to recover from)."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(record, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _tolerant_json_load(path: str, what: str) -> Optional[Dict]:
+    """Load a snapshot, treating a corrupt/unreadable file as a cache miss
+    (warn and return None) — a damaged warm-start store must degrade to a
+    cold start, never take the run down."""
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, ValueError, OSError) as e:
+        warnings.warn(f"ignoring corrupt {what} snapshot {path!r}: {e}",
+                      stacklevel=3)
+        return None
 
 
 def system_fingerprint() -> str:
@@ -72,18 +101,14 @@ def save_policy_state(record: Dict, directory: str, region: str,
     keyed by (region, system)."""
     os.makedirs(directory, exist_ok=True)
     path = _key_path(directory, region, system, prefix="policy")
-    with open(path, "w") as f:
-        json.dump(record, f)
+    _atomic_json_dump(record, path)
     return path
 
 
 def load_policy_state(directory: str, region: str,
                       system: str = "default") -> Optional[Dict]:
     path = _key_path(directory, region, system, prefix="policy")
-    if not os.path.exists(path):
-        return None
-    with open(path) as f:
-        return json.load(f)
+    return _tolerant_json_load(path, "policy")
 
 
 # ---------------------------------------------------------------------------
@@ -94,18 +119,14 @@ def save_agent(agent: TabularAgent, directory: str, region: str,
                system: str = "default") -> str:
     os.makedirs(directory, exist_ok=True)
     path = _key_path(directory, region, system)
-    with open(path, "w") as f:
-        json.dump(agent.state_dict(), f)
+    _atomic_json_dump(agent.state_dict(), path)
     return path
 
 
 def load_agent(directory: str, region: str, system: str = "default"
                ) -> Optional[Dict]:
     path = _key_path(directory, region, system)
-    if not os.path.exists(path):
-        return None
-    with open(path) as f:
-        return json.load(f)
+    return _tolerant_json_load(path, "agent")
 
 
 def warm_start(agent: TabularAgent, rec: Dict,

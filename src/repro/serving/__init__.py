@@ -2,5 +2,6 @@ from .engine import (DispatchSimulator, ContinuousBatcher, ReplicaCostModel,
                      WaveStats, WaveWhatIf)
 from .fleet import (AdmissionControl, ArrivalTrace, FleetReport,
                     FleetSimulator, FleetView, LeastOutstandingRouter,
-                    RoundRobinRouter, RouterPolicy, WhatIfRouter,
-                    make_router, make_trace)
+                    RecoveryLedger, RecoveryPolicy, RoundRobinRouter,
+                    RouterPolicy, RunJournal, WhatIfRouter, make_router,
+                    make_trace)

@@ -149,6 +149,9 @@ class DispatchSimulator:
         self.service = SelectionService(selector, reward=reward, **kw)
         self.stats: List[WaveStats] = []
         self._replica_free = np.zeros(n_replicas)
+        #: (R,) availability mask while a masked wave is in flight, so the
+        #: wave's what-if pricing routes around failed replicas too
+        self._wave_active: Optional[np.ndarray] = None
 
     def _wave_prefix(self, requests: List[Request]) -> np.ndarray:
         """(N+1,) cumulative batch-cost model over the request sequence:
@@ -172,16 +175,56 @@ class DispatchSimulator:
         if chunk_param is None:
             chunk_param = self.chunk_param
         free = self._replica_free - self._replica_free.min()
+        if self._wave_active is not None:
+            # masked (failed) replicas cannot serve this wave: push their
+            # availability past the whole wave's work so priced schedules
+            # route around them, exactly like the dispatch loop will
+            free = free.copy()
+            free[~self._wave_active] += self._wave_prefix(requests)[-1] \
+                + self.cost.fixed * len(requests)
         return get_backend(self.backend).what_if_wave(
             self._wave_prefix(requests), self.R, free, self.h,
             self.cost.fixed, algs, chunk_param=chunk_param)
 
-    def run_wave(self, requests: List[Request], wave_id: int = 0
-                 ) -> WaveStats:
+    def run_wave(self, requests: List[Request], wave_id: int = 0,
+                 active: Optional[np.ndarray] = None,
+                 replica_scale: Optional[np.ndarray] = None) -> WaveStats:
         """One loop instance: dispatch all pending requests with the selected
-        scheduling algorithm; replicas self-assign request-chunks."""
+        scheduling algorithm; replicas self-assign request-chunks.
+
+        ``active`` — optional (R,) mask: failed replicas receive no chunks
+        (their carried busy offsets pass through untouched); ``replica_scale``
+        — optional (R,) per-replica service-time multipliers (stragglers).
+        Both default to the exact historical homogeneous path.
+        """
+        if active is not None:
+            active = np.asarray(active, dtype=bool)
+            if active.shape != (self.R,):
+                raise ValueError(f"active mask must have shape ({self.R},)")
+            if not active.any():
+                raise ValueError("run_wave needs at least one active replica")
+            if active.all():
+                active = None           # clean path, bit-identical
+        if replica_scale is not None:
+            replica_scale = np.asarray(replica_scale, dtype=np.float64)
+            if replica_scale.shape != (self.R,):
+                raise ValueError(f"replica_scale must have shape ({self.R},)")
+            if np.all(replica_scale == 1.0):
+                replica_scale = None    # clean path, bit-identical
+        self._wave_active = active
+        try:
+            return self._run_wave(requests, wave_id, active, replica_scale)
+        finally:
+            self._wave_active = None
+
+    def _run_wave(self, requests: List[Request], wave_id: int,
+                  active: Optional[np.ndarray],
+                  replica_scale: Optional[np.ndarray]) -> WaveStats:
         if self._whatif is not None:    # bind the wave the decision is about
             self._whatif.set_requests(requests)
+        ranks = np.arange(self.R) if active is None else \
+            np.flatnonzero(active)
+        P = len(ranks)                  # replicas that can take work
         inst = self.service.instance(self.region)
         with inst:
             d = inst.decision.with_instance_defaults(self.chunk_param)
@@ -190,39 +233,46 @@ class DispatchSimulator:
             tokens = np.array([r.prompt_len + r.gen_len for r in requests])
             N = len(tokens)
             alg = make_algorithm(alg_idx)
-            alg.reset(N, self.R, chunk_param)
+            alg.reset(N, P, chunk_param)
 
             free = self._replica_free - self._replica_free.min()
             cursor = 0
             chunks = 0
             if alg_idx == 0 and chunk_param <= 0:
-                bounds = np.linspace(0, N, self.R + 1).round().astype(int)
-                for r in range(self.R):
-                    if bounds[r + 1] > bounds[r]:
-                        free[r] += self.cost.cost(
-                            tokens[bounds[r]:bounds[r + 1]])
-                chunks = self.R
+                bounds = np.linspace(0, N, P + 1).round().astype(int)
+                for k, r in enumerate(ranks):
+                    if bounds[k + 1] > bounds[k]:
+                        dt = self.cost.cost(tokens[bounds[k]:bounds[k + 1]])
+                        if replica_scale is not None:
+                            dt *= replica_scale[r]
+                        free[r] += dt
+                chunks = P
             else:
+                # self-scheduling argmin restricted to active replicas;
+                # algorithms see contiguous PE ranks 0..P-1
                 while alg.remaining > 0:
-                    r = int(np.argmin(free))
-                    c = alg.next_chunk(r)
+                    k = int(np.argmin(free[ranks]))
+                    r = int(ranks[k])
+                    c = alg.next_chunk(k)
                     if c <= 0:
                         break
                     batch = tokens[cursor:cursor + c]
                     cursor += c
                     dt = self.cost.cost(batch)
-                    alg.report(r, c, dt, dt + self.h)
+                    if replica_scale is not None:
+                        dt *= replica_scale[r]
+                    alg.report(k, c, dt, dt + self.h)
                     free[r] += self.h + dt
                     chunks += 1
 
-            makespan = float(free.max())
-            lib = percent_load_imbalance(free)
+            makespan = float(free[ranks].max())
+            lib = percent_load_imbalance(free[ranks])
             # full structured observation: the policy's reward function can
             # draw on tail latency / throughput, not just (LT, LIB)
             inst.report(loop_time=makespan, lib=lib,
                         throughput=N / max(makespan, 1e-12),
-                        tail_latency=float(np.percentile(free, 95)),
-                        pe_times=free.tolist())
+                        tail_latency=float(np.percentile(free[ranks], 95)),
+                        pe_times=free[ranks].tolist())
         self._replica_free = free
         st = WaveStats(wave=wave_id, algorithm=alg_idx, n_requests=N,
                        makespan=makespan, lib=lib, chunks=chunks)

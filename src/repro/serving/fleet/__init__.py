@@ -1,6 +1,11 @@
 """Fleet-scale serving: trace-driven routing over continuous-batching
-replica groups (see ``simulator``/``router``/``traces``)."""
+replica groups (see ``simulator``/``router``/``traces``), with fault
+injection, recovery, and crash-safe journaled resume (``recovery``/
+``journal``)."""
 
+from .journal import RunJournal
+from .recovery import (BASELINE_RECOVERY, RecoveryLedger, RecoveryPolicy,
+                       RetryEntry)
 from .router import (ROUTERS, LeastOutstandingRouter, RoundRobinRouter,
                      RouterPolicy, WhatIfRouter, make_router)
 from .simulator import (AdmissionControl, FleetReport, FleetSimulator,
@@ -14,4 +19,6 @@ __all__ = [
     "RouterPolicy", "RoundRobinRouter", "LeastOutstandingRouter",
     "WhatIfRouter", "ROUTERS", "make_router",
     "FleetSimulator", "FleetView", "FleetReport", "AdmissionControl",
+    "RecoveryPolicy", "RecoveryLedger", "RetryEntry", "BASELINE_RECOVERY",
+    "RunJournal",
 ]

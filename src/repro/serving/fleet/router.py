@@ -20,6 +20,7 @@ empty lanes, so the prices are bit-identical to single-device.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple, Type, Union
 
 import numpy as np
@@ -35,6 +36,37 @@ def request_cost(r: Request, cost) -> float:
     return cost.per_token * (r.prompt_len + r.gen_len) + cost.per_request
 
 
+def _routable_index(view) -> Optional[np.ndarray]:
+    """Indices of the groups this wave may dispatch to, or ``None`` when
+    every group is routable (the clean, bit-identical path).  A fleet view
+    without failure awareness (``routable is None``) routes everywhere."""
+    mask = getattr(view, "routable", None)
+    if mask is None or bool(np.all(mask)):
+        return None
+    idx = np.flatnonzero(np.asarray(mask, dtype=bool))
+    if idx.size == 0:
+        raise ValueError("route() called with no routable group")
+    return idx
+
+
+def _subview(view, idx: np.ndarray):
+    """The fleet view restricted to the routable groups ``idx``."""
+    return dataclasses.replace(
+        view, busy=[view.busy[int(g)] for g in idx],
+        capacity=None if view.capacity is None else view.capacity[idx],
+        routable=None)
+
+
+def _scatter(shards: List[List[Request]], idx: np.ndarray, G: int
+             ) -> List[List[Request]]:
+    """Re-place sub-fleet shards onto the full group axis (dead groups get
+    empty shards)."""
+    out: List[List[Request]] = [[] for _ in range(G)]
+    for k, g in enumerate(idx):
+        out[int(g)] = shards[k]
+    return out
+
+
 class RouterPolicy:
     """Protocol: stateful per-fleet routing policy."""
 
@@ -43,10 +75,18 @@ class RouterPolicy:
     def route(self, requests: List[Request], view) -> List[List[Request]]:
         raise NotImplementedError
 
+    # journalable state (crash-safe resume): stateless routers return {}
+    def state_dict(self) -> Dict:
+        return {}
+
+    def load_state_dict(self, state: Dict) -> None:
+        pass
+
 
 class RoundRobinRouter(RouterPolicy):
     """Stripe requests over the groups in arrival order, carrying the
-    cursor across waves — size- and busy-state-blind."""
+    cursor across waves — size- and busy-state-blind.  With a failure-aware
+    view, dead groups are simply skipped in the stripe."""
 
     name = "round_robin"
 
@@ -55,11 +95,20 @@ class RoundRobinRouter(RouterPolicy):
 
     def route(self, requests: List[Request], view) -> List[List[Request]]:
         G = len(view.busy)
+        idx = _routable_index(view)
+        lanes = np.arange(G) if idx is None else idx
+        L = len(lanes)
         shards: List[List[Request]] = [[] for _ in range(G)]
         for j, r in enumerate(requests):
-            shards[(self._cursor + j) % G].append(r)
-        self._cursor = (self._cursor + len(requests)) % G
+            shards[int(lanes[(self._cursor + j) % L])].append(r)
+        self._cursor = (self._cursor + len(requests)) % L
         return shards
+
+    def state_dict(self) -> Dict:
+        return {"cursor": int(self._cursor)}
+
+    def load_state_dict(self, state: Dict) -> None:
+        self._cursor = int(state.get("cursor", 0))
 
 
 class LeastOutstandingRouter(RouterPolicy):
@@ -77,7 +126,12 @@ class LeastOutstandingRouter(RouterPolicy):
         # a slowed group (capacity < 1); uniform fleets take the exact
         # historical path
         slow = (np.ones(G) if getattr(view, "capacity", None) is None
-                else 1.0 / np.asarray(view.capacity))
+                else 1.0 / np.maximum(np.asarray(view.capacity), 1e-9))
+        idx = _routable_index(view)
+        if idx is not None:
+            dead = np.ones(G, dtype=bool)
+            dead[idx] = False
+            load[dead] = np.inf         # JSQ never joins a dead group
         shards: List[List[Request]] = [[] for _ in range(G)]
         for r in requests:
             g = int(np.argmin(load))
@@ -168,6 +222,12 @@ class WhatIfRouter(RouterPolicy):
     # -- routing -------------------------------------------------------------
     def route(self, requests: List[Request], view) -> List[List[Request]]:
         G = len(view.busy)
+        idx = _routable_index(view)
+        if idx is not None:
+            # price partitions over the live sub-fleet only; dead groups
+            # receive empty shards (their queued work was already migrated)
+            shards = self.route(requests, _subview(view, idx))
+            return _scatter(shards, idx, G)
         if not requests or G == 1:
             return [list(requests)] + [[] for _ in range(G - 1)]
         parts = self._partitions(requests, view)

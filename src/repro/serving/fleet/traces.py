@@ -28,6 +28,8 @@ Three processes cover the regimes the router study needs:
 
 from __future__ import annotations
 
+import json
+import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List
 
@@ -50,6 +52,15 @@ class ArrivalTrace:
 
     def __len__(self) -> int:
         return len(self.requests)
+
+    @property
+    def signature(self) -> str:
+        """Stable digest of the replay recipe — the run journal records it
+        so a snapshot can never be resumed under a different trace."""
+        ident = json.dumps([self.kind, self.seed, len(self.requests),
+                            sorted((k, repr(v))
+                                   for k, v in self.params.items())])
+        return f"{self.kind}-{zlib.crc32(ident.encode('utf-8')):08x}"
 
     @property
     def duration(self) -> float:

@@ -1,12 +1,15 @@
 """Beyond-paper extensions: Q-table warm starting (the paper's suggested
 'eliminate the learning phase' path) and the jitted DES variant."""
 
+import os
+
 import numpy as np
 import pytest
 
 from repro.core import QLearnAgent, SarsaAgent
-from repro.core.persistence import (AgentStatsLogger, load_agent, save_agent,
-                                    warm_start)
+from repro.core.persistence import (AgentStatsLogger, load_agent,
+                                    load_policy_state, save_agent,
+                                    save_policy_state, warm_start)
 
 
 # ---------------------------------------------------------------------------
@@ -29,6 +32,29 @@ def test_save_load_roundtrip(tmp_path):
     assert rec["kind"] == "QLearnAgent"
     np.testing.assert_allclose(np.asarray(rec["q"]), a.q)
     assert load_agent(str(tmp_path), "gravity", system="epyc") is None
+
+
+def test_save_is_atomic_and_load_tolerates_corruption(tmp_path):
+    """A snapshot save must never leave a torn file (temp + os.replace),
+    and a corrupt snapshot must be a warned cache miss (None), not a
+    crash — a damaged warm-start store degrades to a cold start."""
+    rec = {"method": "QLearn", "state": {"q": [1.0, 2.0]}}
+    path = save_policy_state(rec, str(tmp_path), "L0", system="sys")
+    assert load_policy_state(str(tmp_path), "L0", system="sys") == rec
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+    with open(path, "w") as f:
+        f.write('{"method": "QLe')        # torn write
+    with pytest.warns(UserWarning, match="corrupt policy"):
+        assert load_policy_state(str(tmp_path), "L0", system="sys") is None
+
+    a = _train_agent()
+    apath = save_agent(a, str(tmp_path), "L1")
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+    with open(apath, "w") as f:
+        f.write("not json at all")
+    with pytest.warns(UserWarning, match="corrupt agent"):
+        assert load_agent(str(tmp_path), "L1") is None
 
 
 def test_warm_start_skips_learning_phase(tmp_path):

@@ -1,0 +1,477 @@
+"""Fault-tolerant fleet serving: failure injection, recovery policy,
+accounting invariants, and crash-safe journal resume."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.serving import (AdmissionControl, DispatchSimulator,
+                           FleetSimulator, RecoveryPolicy, RunJournal,
+                           make_trace)
+from repro.serving.fleet.recovery import BASELINE_RECOVERY, RecoveryLedger
+from repro.sim.perturb import (FleetPerturb, GroupSlowdown, ReplicaFailure,
+                               ReplicaStraggler)
+
+BURSTY = dict(base_rate=2000.0, burst_factor=6.0, p_enter=0.015, p_exit=0.05)
+
+
+def _fleet(n_groups=3, replicas=4, router="whatif", **kw):
+    kw.setdefault("selector", "SimPolicy")
+    return FleetSimulator(n_groups=n_groups, replicas_per_group=replicas,
+                          router=router, seed=0, **kw)
+
+
+def _trace(n=1200, seed=7, **params):
+    params = {**BURSTY, **params}
+    return make_trace("bursty", n, seed=seed, **params)
+
+
+# ---------------------------------------------------------------------------
+# perturb layer: replica-level events
+# ---------------------------------------------------------------------------
+
+def test_replica_state_masks_and_scales():
+    p = FleetPerturb(
+        failures=(ReplicaFailure(group=1, t0=1.0, t1=2.0, replicas=(0, 2)),),
+        stragglers=(ReplicaStraggler(group=0, factor=3.0, t0=0.5, t1=1.5),))
+    assert p.has_replica_events
+    assert p.replica_state(0.0, 2, 4) is None      # nothing active yet
+    alive, scale = p.replica_state(1.2, 2, 4)
+    assert alive.shape == (2, 4) and scale.shape == (2, 4)
+    assert not alive[1, 0] and not alive[1, 2]
+    assert alive[1, 1] and alive[0, :].all()
+    assert np.allclose(scale[0], 3.0) and np.allclose(scale[1], 1.0)
+    # half-open window: inactive exactly at t1 -> back on the clean path
+    assert p.replica_state(2.0, 2, 4) is None
+
+
+def test_failure_start_whole_group_only():
+    p = FleetPerturb(failures=(
+        ReplicaFailure(group=0, t0=1.0, t1=2.0),                 # whole
+        ReplicaFailure(group=1, t0=1.0, t1=2.0, replicas=(0,)),  # partial
+        ReplicaFailure(group=0, t0=5.0),                         # permanent
+    ))
+    assert p.failure_start(0, 3, 4, 0.5, 1.5) == (1.0, 2.0)
+    # a partial failure never interrupts in-flight work
+    assert p.failure_start(1, 3, 4, 0.5, 1.5) is None
+    # strictly-inside window semantics
+    assert p.failure_start(0, 3, 4, 1.0, 1.5) is None
+    assert p.failure_start(0, 3, 4, 4.0, 9.0) == (5.0, np.inf)
+    # a partial set covering every replica IS a whole-group failure
+    q = FleetPerturb(failures=(
+        ReplicaFailure(group=0, t0=1.0, replicas=(0, 1, 2, 3)),))
+    assert q.failure_start(0, 3, 4, 0.0, 2.0) == (1.0, np.inf)
+
+
+def test_next_change_boundaries():
+    p = FleetPerturb(events=(GroupSlowdown(group=0, factor=2.0, t0=3.0),),
+                     failures=(ReplicaFailure(group=1, t0=1.0, t1=2.0),))
+    assert p.next_change(0.0) == 1.0
+    assert p.next_change(1.0) == 2.0
+    assert p.next_change(2.5) == 3.0
+    assert p.next_change(3.0) is None
+
+
+# ---------------------------------------------------------------------------
+# engine layer: masked / straggling replicas in one wave
+# ---------------------------------------------------------------------------
+
+def test_run_wave_active_mask():
+    reqs = _trace(64).requests
+    a = DispatchSimulator(4, selector="SimPolicy", seed=0)
+    b = DispatchSimulator(4, selector="SimPolicy", seed=0)
+    a.run_wave(list(reqs))
+    # all-true mask is normalized to the exact unmasked path
+    b.run_wave(list(reqs), active=np.ones(4, dtype=bool))
+    assert np.array_equal(a.busy, b.busy)
+
+    c = DispatchSimulator(4, selector="SimPolicy", seed=0)
+    mask = np.array([True, False, True, True])
+    stat = c.run_wave(list(reqs), active=mask)
+    assert c.busy[1] == 0.0            # dead replica got no work
+    assert (c.busy[mask] > 0).all()
+    assert stat.n_requests == len(reqs)
+
+    d = DispatchSimulator(4, selector="SimPolicy", seed=0)
+    with pytest.raises(ValueError):
+        d.run_wave(list(reqs), active=np.zeros(4, dtype=bool))
+
+
+def test_run_wave_replica_scale_slows():
+    reqs = _trace(64).requests
+    a = DispatchSimulator(4, selector="SimPolicy", seed=0)
+    a.run_wave(list(reqs))
+    b = DispatchSimulator(4, selector="SimPolicy", seed=0)
+    b.run_wave(list(reqs), replica_scale=np.array([8.0, 1.0, 1.0, 1.0]))
+    assert b.busy.max() > a.busy.max()
+    # all-ones scale is normalized to the exact unscaled path
+    c = DispatchSimulator(4, selector="SimPolicy", seed=0)
+    c.run_wave(list(reqs), replica_scale=np.ones(4))
+    assert np.array_equal(a.busy, c.busy)
+
+
+# ---------------------------------------------------------------------------
+# routers under a failure-aware view
+# ---------------------------------------------------------------------------
+
+def _dead_group_view(G=3, R=2, dead=1):
+    from repro.serving import FleetView, ReplicaCostModel
+    from repro.sim.backends import get_backend
+
+    routable = np.ones(G, dtype=bool)
+    routable[dead] = False
+    return FleetView(now=0.0, busy=[np.zeros(R) for _ in range(G)],
+                     n_replicas=R, cost=ReplicaCostModel(), h=0.2e-3,
+                     backend=get_backend(None), routable=routable)
+
+
+@pytest.mark.parametrize("router", ["round_robin", "least_outstanding",
+                                    "whatif"])
+def test_routers_avoid_dead_groups(router):
+    from repro.serving import make_router
+
+    reqs = _trace(40).requests
+    view = _dead_group_view(dead=1)
+    shards = make_router(router).route(list(reqs), view)
+    assert len(shards) == 3
+    assert shards[1] == []
+    assert sum(len(s) for s in shards) == len(reqs)
+
+
+def test_round_robin_cursor_state_roundtrip():
+    from repro.serving import make_router
+
+    reqs = _trace(10).requests
+    r1 = make_router("round_robin")
+    r1.route(list(reqs), _dead_group_view(dead=1))
+    state = r1.state_dict()
+    r2 = make_router("round_robin")
+    r2.load_state_dict(state)
+    v = _dead_group_view(dead=1)
+    assert [[q.rid for q in s] for s in r1.route(list(reqs), v)] == \
+        [[q.rid for q in s] for s in r2.route(list(reqs), v)]
+
+
+# ---------------------------------------------------------------------------
+# recovery policy mechanics
+# ---------------------------------------------------------------------------
+
+def test_backoff_deterministic_capped():
+    rp = RecoveryPolicy(backoff_base=0.01, backoff_factor=2.0,
+                        backoff_cap=0.05, jitter=0.3)
+    seq = [rp.backoff(42, a, seed=3) for a in range(1, 6)]
+    assert seq == [rp.backoff(42, a, seed=3) for a in range(1, 6)]
+    assert all(b <= 0.05 * 1.3 + 1e-12 for b in seq)
+    assert rp.backoff(42, 1, seed=3) != rp.backoff(43, 1, seed=3)
+    assert BASELINE_RECOVERY.backoff(42, 1) == 0.0
+    assert not BASELINE_RECOVERY.exhausted(10 ** 6)
+    assert RecoveryPolicy(max_retries=2).exhausted(3)
+    assert not RecoveryPolicy(max_retries=2).exhausted(2)
+
+
+def test_ledger_accounting_check():
+    led = RecoveryLedger()
+    led.record_retry(1)
+    led.dead_letter(2, "max_retries")
+    with pytest.raises(AssertionError):
+        led.check(10, 8)               # 8 + 1 dead != 10
+    led.check(9, 8)
+
+
+def _outage_perturb(duration, group=1, frac=(0.25, 0.6)):
+    return FleetPerturb(failures=(
+        ReplicaFailure(group=group, t0=duration * frac[0],
+                       t1=duration * frac[1]),))
+
+
+@pytest.mark.parametrize("router", ["whatif", "least_outstanding"])
+def test_interrupted_work_retried_and_accounted(router):
+    trace = _trace(1500)
+    sim = _fleet(router=router,
+                 perturb=_outage_perturb(trace.duration),
+                 recovery=RecoveryPolicy(max_retries=6))
+    rep = sim.run(trace, keep_latencies=True)
+    r = rep.recovery
+    assert r is not None
+    assert r["completed"] + r["dead_lettered"] == len(trace)
+    assert r["interrupted"] > 0 and r["retries"] >= r["interrupted"]
+    assert r["dead_lettered"] == 0     # transient outage: nothing lost
+    assert len(rep.latencies) == r["completed"]
+
+
+def test_recovery_beats_blind_baseline():
+    trace = _trace(3000)
+    pert = _outage_perturb(trace.duration)
+    on = _fleet(perturb=pert, recovery=RecoveryPolicy(max_retries=6)) \
+        .run(trace)
+    off = _fleet(perturb=pert, recovery=None).run(trace)
+    assert off.recovery["completed"] == len(trace)   # baseline loses nothing
+    assert on.makespan < off.makespan
+    assert on.p95 < off.p95
+
+
+def test_permanent_failure_dead_letters_with_budget():
+    trace = _trace(800)
+    # group 1 dies at 25% of the trace and never rejoins; retries are
+    # PINNED to it, so its interrupted work must exhaust the budget
+    pert = FleetPerturb(failures=(
+        ReplicaFailure(group=1, t0=trace.duration * 0.25),))
+    sim = _fleet(perturb=pert,
+                 recovery=RecoveryPolicy(max_retries=1, migrate=False,
+                                         backoff_base=0.05,
+                                         backoff_cap=0.05))
+    rep = sim.run(trace)
+    r = rep.recovery
+    assert r["dead_lettered"] > 0
+    assert r["dead_by_reason"] == {"max_retries": r["dead_lettered"]}
+    assert r["completed"] + r["dead_lettered"] == len(trace)
+
+
+def test_permanent_failure_unbounded_baseline_raises():
+    trace = _trace(600)
+    pert = FleetPerturb(failures=(
+        ReplicaFailure(group=0, t0=trace.duration * 0.2),))
+    # blind unbounded baseline keeps feeding a group that never rejoins
+    sim = _fleet(router="round_robin", perturb=pert, recovery=None)
+    with pytest.raises(RuntimeError, match="permanently"):
+        sim.run(trace)
+
+
+def test_permanent_failure_visible_migration_completes():
+    trace = _trace(800)
+    pert = FleetPerturb(failures=(
+        ReplicaFailure(group=0, t0=trace.duration * 0.2),))
+    rep = _fleet(perturb=pert, recovery=RecoveryPolicy(max_retries=6)) \
+        .run(trace)
+    assert rep.recovery["completed"] == len(trace)
+    assert rep.per_group[0]["busy_s"] < rep.per_group[1]["busy_s"]
+
+
+def test_all_groups_down_waits_out_the_window():
+    trace = _trace(500)
+    d = trace.duration
+    pert = FleetPerturb(failures=tuple(
+        ReplicaFailure(group=g, t0=d * 0.3, t1=d * 0.6) for g in range(3)))
+    rep = _fleet(perturb=pert, recovery=RecoveryPolicy(max_retries=8)) \
+        .run(trace)
+    assert rep.recovery["completed"] + rep.recovery["dead_lettered"] \
+        == len(trace)
+    assert rep.recovery["dead_lettered"] == 0
+
+
+def test_shed_wait_degrades_deterministically():
+    trace = _trace(2000)
+    d = trace.duration
+    pert = FleetPerturb(failures=tuple(       # deep outage: 2 of 3 groups
+        ReplicaFailure(group=g, t0=d * 0.2, t1=d * 0.9) for g in (0, 1)))
+
+    def run():
+        # queue-depth backpressure makes the degraded fleet hold work in
+        # the pending queue — that wait is what shed_wait bounds
+        return _fleet(perturb=pert,
+                      admission=AdmissionControl(wave_quota=64,
+                                                 queue_depth=0.1),
+                      recovery=RecoveryPolicy(max_retries=6,
+                                              shed_wait=0.2)).run(trace)
+
+    rep = run()
+    r = rep.recovery
+    assert r["shed"] > 0
+    assert r["dead_by_reason"].get("shed") == r["shed"]
+    assert r["completed"] + r["dead_lettered"] == len(trace)
+    assert run().summary() == rep.summary()   # shedding is deterministic
+
+
+def test_hedge_first_finish_wins_and_accounts():
+    trace = _trace(1500)
+    pert = _outage_perturb(trace.duration, frac=(0.2, 0.7))
+    rep = _fleet(perturb=pert,
+                 recovery=RecoveryPolicy(max_retries=6, hedge=True)) \
+        .run(trace)
+    r = rep.recovery
+    assert r["hedges"] > 0
+    assert 0 <= r["hedge_wins"] <= r["hedges"]
+    assert r["completed"] + r["dead_lettered"] == len(trace)
+
+
+def test_timeout_cancels_and_retries():
+    trace = _trace(1200)
+    pert = _outage_perturb(trace.duration)
+    rep = _fleet(perturb=pert,
+                 recovery=RecoveryPolicy(timeout=0.02, max_retries=8)) \
+        .run(trace, keep_latencies=True)
+    r = rep.recovery
+    assert r["timeouts"] > 0
+    assert r["completed"] + r["dead_lettered"] == len(trace)
+    assert len(rep.latencies) == r["completed"]
+
+
+# ---------------------------------------------------------------------------
+# clean-path neutrality + re-entrancy
+# ---------------------------------------------------------------------------
+
+def test_armed_recovery_without_events_is_bit_neutral():
+    trace = _trace(1000)
+    clean = _fleet().run(trace, keep_latencies=True)
+    armed = _fleet(recovery=RecoveryPolicy()) \
+        .run(trace, keep_latencies=True)
+    s_clean = clean.summary()
+    s_armed = {k: v for k, v in armed.summary().items() if k != "recovery"}
+    assert s_clean == s_armed
+    assert np.array_equal(clean.latencies, armed.latencies)
+    assert armed.recovery["retries"] == 0
+    assert armed.recovery["completed"] == len(trace)
+
+
+def test_run_is_single_shot():
+    trace = _trace(200)
+    sim = _fleet()
+    sim.run(trace)
+    with pytest.raises(RuntimeError, match="single-shot"):
+        sim.run(trace)
+
+
+# ---------------------------------------------------------------------------
+# journal: atomicity, retention, corruption tolerance
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrip_and_retention(tmp_path):
+    j = RunJournal(str(tmp_path), keep=2)
+    for w in (3, 6, 9):
+        j.save(w, {"now": float(w)}, {"x": np.arange(w)})
+    assert j.waves() == [6, 9]         # keep=2 retention
+    snap = j.load(9)
+    assert snap["meta"]["now"] == 9.0 and snap["meta"]["wave"] == 9
+    assert np.array_equal(snap["x"], np.arange(9))
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+    j.clear()
+    assert j.waves() == [] and j.latest() is None
+
+
+def test_journal_latest_skips_corrupt(tmp_path):
+    j = RunJournal(str(tmp_path), keep=0)
+    j.save(1, {"now": 1.0}, {"x": np.ones(2)})
+    j.save(2, {"now": 2.0}, {"x": np.ones(2)})
+    with open(os.path.join(str(tmp_path), "wave_000000002.npz"), "wb") as f:
+        f.write(b"torn write")
+    with pytest.warns(UserWarning, match="unreadable journal"):
+        snap = j.latest()
+    assert snap["meta"]["wave"] == 1   # fell back to the older snapshot
+
+
+def test_journal_version_guard(tmp_path):
+    j = RunJournal(str(tmp_path))
+    path = j.save(1, {"now": 1.0}, {"x": np.ones(2)})
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["meta"].tobytes()).decode())
+        arrays = {k: z[k] for k in z.files if k != "meta"}
+    meta["version"] = 99
+    payload = dict(arrays)
+    payload["meta"] = np.frombuffer(json.dumps(meta).encode(), np.uint8)
+    with open(path, "wb") as f:
+        np.savez(f, **payload)
+    with pytest.raises(ValueError, match="version"):
+        j.load(1)
+
+
+# ---------------------------------------------------------------------------
+# kill-at-arbitrary-wave resume: bit-identical reports
+# ---------------------------------------------------------------------------
+
+def _resume_from(tmp_path, tag, wave, build, trace):
+    """Copy snapshot ``wave`` into a fresh journal dir and resume there."""
+    import shutil
+
+    d = os.path.join(str(tmp_path), f"resume_{tag}_{wave}")
+    os.makedirs(d)
+    shutil.copy(os.path.join(str(tmp_path), "full",
+                             f"wave_{wave:09d}.npz"), d)
+    return build().run(trace, keep_latencies=True,
+                       journal=RunJournal(d, every=3, keep=0), resume=True)
+
+
+@pytest.mark.parametrize("faulty", [False, True])
+def test_resume_bit_identical_from_any_wave(tmp_path, faulty):
+    trace = _trace(1200)
+    pert = _outage_perturb(trace.duration) if faulty else None
+    rec = RecoveryPolicy(max_retries=6) if faulty else None
+
+    def build():
+        return _fleet(n_groups=3, replicas=3, perturb=pert, recovery=rec)
+
+    full_dir = os.path.join(str(tmp_path), "full")
+    ref = build().run(trace, keep_latencies=True,
+                      journal=RunJournal(full_dir, every=3, keep=0))
+    waves = RunJournal(full_dir, every=3, keep=0).waves()
+    assert len(waves) >= 3
+    # resume from an early, a middle, and the final snapshot — every one
+    # must reproduce the uninterrupted report bit-for-bit
+    for wave in (waves[0], waves[len(waves) // 2], waves[-1]):
+        res = _resume_from(tmp_path, "f" if faulty else "c", wave,
+                           build, trace)
+        assert res.summary() == ref.summary(), f"diverged from wave {wave}"
+        assert np.array_equal(res.latencies, ref.latencies)
+
+
+def test_resume_guards(tmp_path):
+    trace = _trace(400)
+    j = RunJournal(str(tmp_path), every=2, keep=0)
+    _fleet(n_groups=2, replicas=2).run(trace, journal=j)
+    # wrong trace
+    with pytest.raises(ValueError, match="cannot resume"):
+        _fleet(n_groups=2, replicas=2).run(_trace(400, seed=8),
+                                           journal=j, resume=True)
+    # wrong fleet shape
+    with pytest.raises(ValueError, match="shape"):
+        _fleet(n_groups=3, replicas=2).run(trace, journal=j, resume=True)
+    # wrong router family
+    with pytest.raises(ValueError, match="router"):
+        _fleet(n_groups=2, replicas=2, router="round_robin") \
+            .run(trace, journal=j, resume=True)
+    # resume without a snapshot
+    with pytest.raises(ValueError, match="no journal"):
+        _fleet(n_groups=2, replicas=2).run(
+            trace, journal=RunJournal(os.path.join(str(tmp_path), "empty")),
+            resume=True)
+
+
+# ---------------------------------------------------------------------------
+# property: the accounting invariant across scenario space
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(router=st.sampled_from(["whatif", "least_outstanding"]),
+       scenario=st.sampled_from(["outage", "permanent", "straggle", "none"]),
+       hedge=st.booleans(), migrate=st.booleans())
+def test_every_request_completed_once_or_dead_lettered(router, scenario,
+                                                       hedge, migrate):
+    trace = _trace(500, seed=11)
+    d = trace.duration
+    pert = {
+        "outage": FleetPerturb(failures=(
+            ReplicaFailure(group=1, t0=d * 0.2, t1=d * 0.7),)),
+        "permanent": FleetPerturb(failures=(
+            ReplicaFailure(group=2, t0=d * 0.3),)),
+        "straggle": FleetPerturb(stragglers=(
+            ReplicaStraggler(group=0, factor=4.0, t0=d * 0.1, t1=d * 0.8,
+                             replicas=(0, 1)),)),
+        "none": None,
+    }[scenario]
+    rec = RecoveryPolicy(max_retries=2, hedge=hedge, migrate=migrate,
+                         backoff_base=0.05, backoff_cap=0.1)
+    rep = _fleet(router=router, perturb=pert, recovery=rec) \
+        .run(trace, keep_latencies=True)
+    r = rep.recovery
+    # the invariant: completed exactly once + dead-lettered == admitted
+    assert r["completed"] + r["dead_lettered"] == len(trace)
+    assert len(rep.latencies) == r["completed"]
+    assert r["hedge_wins"] <= r["hedges"]
+    if scenario == "none":
+        assert r["completed"] == len(trace) and r["retries"] == 0

@@ -75,6 +75,37 @@ def test_checkpoint_async_and_atomic(tmp_path):
     assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
 
 
+def test_checkpoint_async_error_surfaces_in_wait(tmp_path):
+    """A background save that throws must re-raise from wait(), not vanish
+    with the daemon thread (a silently lost checkpoint defeats the whole
+    point of checkpointing)."""
+    mgr = CheckpointManager(str(tmp_path))
+    # an object-dtype leaf makes np.save(allow_pickle=False) raise on the
+    # background thread
+    mgr.async_save(1, {"bad": np.array([object()])})
+    with pytest.raises(ValueError):
+        mgr.wait()
+    mgr.wait()                          # error is raised once, then cleared
+    assert mgr.latest_step() is None    # nothing was committed
+
+
+def test_checkpoint_async_error_surfaces_in_next_save(tmp_path):
+    """Callers that never wait() still see the failure: the NEXT save (sync
+    or async) joins the background thread first and re-raises."""
+    good = {"w": jnp.ones((4,))}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.async_save(1, {"bad": np.array([object()])})
+    with pytest.raises(ValueError):
+        mgr.save(2, good)
+    mgr2 = CheckpointManager(str(tmp_path))
+    mgr2.async_save(3, {"bad": np.array([object()])})
+    with pytest.raises(ValueError):
+        mgr2.async_save(4, good)
+    # the manager stays usable after the error surfaced
+    mgr.save(5, good)
+    assert mgr.latest_step() == 5
+
+
 def test_checkpoint_elastic_restore(tmp_path):
     """Restore places shards with the *current* mesh's sharding (here the
     1-CPU mesh; the multi-device path is exercised in the dry-run)."""
