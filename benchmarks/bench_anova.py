@@ -37,7 +37,6 @@ def run():
         "selector_x_chunk": effect(lambda r: f"{r['selector']}|{r['chunk']}"),
     }
     # variance explained (between-group share per factor)
-    n = len(deg)
     ss_tot = sum((d - grand) ** 2 for d in deg)
     shares = {}
     for factor in ("selector", "chunk", "reward"):

@@ -1,0 +1,277 @@
+"""Learned-selection benchmark: train the contextual-bandit policy offline
+on counterfactual transition logs, then judge it exactly like every other
+selection method — Fig. 5 regret vs the Oracle — on held-out (app, system)
+cells **never seen in training** (each app and each system appears in
+training, just never that pairing: transfer, not memorization).
+
+Gates (``--smoke`` runs a reduced version as the CI tier1 gate):
+
+* LearnedPolicy beats mid-exploration QLearn AND RandomSel on held-out
+  cells (zero live exploration is the whole point);
+* LearnedHybrid regret <= HybridPolicy regret (the net's top-k window must
+  not be worse than the expert ladder's);
+* the distilled threshold ladder stays within its stated regret bound of
+  the trained net on held-out transitions;
+* (recorded, not gated) SimPolicy comparison + decide() latency both ways —
+  the learned policy must not pay SimPolicy's per-decision what-if cost.
+
+Everything is recorded to ``results/bench_learned.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _stamp(record: dict) -> dict:
+    """Platform + device-count metadata (benchmarks/_meta.py) so bench
+    trajectories stay comparable across machines and meshes."""
+    try:
+        from ._meta import stamp
+    except ImportError:          # run as a script, not as benchmarks.*
+        from _meta import stamp
+    return stamp(record)
+
+
+#: training cells — every held-out app and system also appears here (the
+#: *_het twins cover the held-out machine scale with different pe_speeds),
+#: but never in the held-out pairing itself
+TRAIN_CELLS = (("tc", "broadwell"), ("tc", "cascadelake"),
+               ("tc", "epyc_het"), ("mandelbrot", "epyc"),
+               ("mandelbrot", "broadwell"), ("hacc", "cascadelake"),
+               ("hacc", "epyc_het"), ("hacc", "broadwell_het"),
+               ("stream", "epyc"), ("lulesh", "broadwell_het"))
+
+#: held-out (app, system) pairs — never logged, never trained on
+HELDOUT_CELLS = (("tc", "epyc"), ("hacc", "broadwell"))
+
+EVAL_SELECTORS = [("RandomSel", None), ("QLearn", "LT"), ("Hybrid", "LT"),
+                  ("SimPolicy", "LT"), ("Learned", "LT"),
+                  ("LearnedHybrid", "LT")]
+
+#: the distillation's stated regret-vs-teacher bound (gated on held-out)
+DISTILL_BOUND = 0.15
+
+
+def _tag(sel, reward):
+    return f"{sel}+{reward}" if reward else sel
+
+
+def _collect(cells, T: int, seed: int = 0, perturbed: bool = True):
+    """Counterfactual transition log over ``cells`` (plus PE-slowdown
+    twins of each cell for perturbation-telemetry coverage)."""
+    from repro.sim import (CellSpec, ReplayBatch, TransitionLogger,
+                           get_system, pe_slowdown_spec)
+
+    tl = TransitionLogger()
+    specs = [CellSpec(app=a, system=s, selector="ExpertSel")
+             for a, s in cells]
+    if perturbed:
+        for a, s in cells:
+            P = get_system(s).P
+            specs.append(CellSpec(
+                app=a, system=s, selector="ExpertSel",
+                perturb=pe_slowdown_spec(P, frac=0.25, factor=6.0,
+                                         t0=T // 4, t1=(3 * T) // 4)))
+    ReplayBatch(specs, T=T, seed=seed, translog=tl).run()
+    return tl.arrays()
+
+
+def _train(cells, T: int, n_steps: int, hidden: int = 32, seed: int = 0):
+    """Train on ``cells``; returns (state, train arrays, result dict)."""
+    from repro.runtime.policy_trainer import (PolicyTrainerConfig,
+                                              train_policy_state)
+
+    arrays = _collect(cells, T=T, seed=seed)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        state, result = train_policy_state(
+            arrays, ckpt_dir,
+            cfg=PolicyTrainerConfig(ckpt_dir=ckpt_dir, n_steps=n_steps,
+                                    hidden=hidden, seed=seed))
+    return state, arrays, result
+
+
+def _heldout_regret(state, cells, T: int, reps: int,
+                    selectors=EVAL_SELECTORS, seed: int = 0) -> dict:
+    """Fig. 5 degradation per selector on ``cells``, with the trained state
+    installed as the process default so learned lanes pick it up."""
+    from repro.core import set_default_state
+    from repro.sim import run_campaign
+
+    set_default_state(state)
+    try:
+        res = run_campaign(list(cells), T=T, reps=reps, selectors=selectors,
+                           chunk_modes=("default",), seed=seed)
+    finally:
+        set_default_state(None)
+    out = {}
+    for (app, sysname), cell in res.items():
+        deg = cell.degradation()
+        out[f"{app}/{sysname}"] = {
+            _tag(sel, reward): round(deg[(sel, "default", reward)], 2)
+            for sel, reward in selectors}
+    return out
+
+
+def _mean_regret(per_cell: dict, tag: str) -> float:
+    return float(np.mean([r[tag] for r in per_cell.values()]))
+
+
+def _distill(state, train_arrays, heldout_cells, T: int, seed: int = 0):
+    """Fit the interpretable ladder on the training transitions, verify its
+    regret vs the teacher net on held-out transitions."""
+    from repro.core.learned import (distill_ladder, mlp_forward,
+                                    params_from_state)
+
+    ladder = distill_ladder(state, train_arrays["features"],
+                            regret_bound=DISTILL_BOUND)
+    held = _collect(heldout_cells, T=T, seed=seed, perturbed=False)
+    X, costs = held["features"], np.asarray(held["costs"], np.float64)
+    params = params_from_state(state["params"])
+    net_pick = np.argmin(mlp_forward(params, X.astype(np.float32)), axis=1)
+    lad_pick = ladder.predict(X)
+    rows = np.arange(len(costs))
+    net_cost = float(costs[rows, net_pick].sum())
+    lad_cost = float(costs[rows, lad_pick].sum())
+    return ladder, {
+        "teacher_agreement": round(ladder.teacher_agreement, 4),
+        "n_leaves": ladder.n_leaves,
+        "heldout_cost_ratio": round(lad_cost / net_cost, 4),
+        "regret_bound": DISTILL_BOUND,
+        "rules": ladder.describe(),
+    }
+
+
+def decision_latency(state, n: int = 200) -> dict:
+    """us per ``decide()``: the learned forward vs SimPolicy's what-if
+    pricing (cold = the batched pricing call; warm = cache hit)."""
+    from repro.core import LoopFeaturizer, SimPolicy, make_policy
+    from repro.sim import LoopWhatIf, get_application, get_system
+
+    profile = get_application("tc").loops(0)[0]
+    system = get_system("epyc")
+    out = {}
+
+    fz = LoopFeaturizer(system)
+    fz.set_context(profile, 0)
+    learned = make_policy("Learned", featurizer=fz, state=state)
+    t0 = time.perf_counter()
+    learned.decide()
+    out["Learned_cold"] = round((time.perf_counter() - t0) * 1e6, 2)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        learned.decide()
+    out["Learned_warm"] = round((time.perf_counter() - t0) / n * 1e6, 2)
+
+    whatif = LoopWhatIf(system)
+    whatif.set_context(profile, 0)
+    sim = SimPolicy(whatif, reward="LT")
+    t0 = time.perf_counter()
+    sim.decide()
+    out["SimPolicy_cold"] = round((time.perf_counter() - t0) * 1e6, 2)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        sim.decide()
+    out["SimPolicy_warm"] = round((time.perf_counter() - t0) / n * 1e6, 2)
+    return out
+
+
+def run(T: int = 40, reps: int = 2, n_steps: int = 600) -> dict:
+    state, train_arrays, result = _train(TRAIN_CELLS, T=T, n_steps=n_steps)
+    per_cell = _heldout_regret(state, HELDOUT_CELLS, T=T, reps=reps)
+    _, distilled = _distill(state, train_arrays, HELDOUT_CELLS, T=T)
+    return {
+        "train": {"cells": [f"{a}/{s}" for a, s in TRAIN_CELLS], "T": T,
+                  "n_steps": n_steps,
+                  "transitions": int(len(train_arrays["features"])),
+                  "final_loss": round(result["losses"][-1], 6),
+                  "train_regret": round(result["train_regret"], 6)},
+        "heldout_regret_pct": per_cell,
+        "distilled": distilled,
+        "decision_latency_us": decision_latency(state),
+    }
+
+
+def smoke() -> None:
+    """CI gate: reduced train -> held-out-regret -> distill loop.  On cells
+    never seen in training, LearnedPolicy must beat mid-exploration QLearn
+    and RandomSel, LearnedHybrid must not regress vs HybridPolicy, and the
+    distilled ladder must honour its stated regret bound vs the net."""
+    train_cells = (("tc", "broadwell"), ("tc", "cascadelake"),
+                   ("tc", "epyc_het"), ("mandelbrot", "epyc"),
+                   ("hacc", "epyc_het"), ("hacc", "cascadelake"))
+    heldout = (("tc", "epyc"),)
+    state, train_arrays, _ = _train(train_cells, T=12, n_steps=250,
+                                    hidden=24)
+    per_cell = _heldout_regret(state, heldout, T=16, reps=1)
+    reg = per_cell["tc/epyc"]
+    print(f"smoke learned tc/epyc T=16 heldout regret: "
+          f"learned={reg['Learned+LT']}% qlearn={reg['QLearn+LT']}% "
+          f"random={reg['RandomSel']}% hybrid={reg['Hybrid+LT']}% "
+          f"learnedhybrid={reg['LearnedHybrid+LT']}% "
+          f"sim={reg['SimPolicy+LT']}%")
+    assert reg["Learned+LT"] < reg["QLearn+LT"], \
+        (f"LearnedPolicy regret {reg['Learned+LT']}% did not beat "
+         f"mid-exploration QLearn {reg['QLearn+LT']}%")
+    assert reg["Learned+LT"] < reg["RandomSel"], \
+        (f"LearnedPolicy regret {reg['Learned+LT']}% did not beat "
+         f"RandomSel {reg['RandomSel']}%")
+    assert reg["LearnedHybrid+LT"] <= reg["Hybrid+LT"] + 1e-9, \
+        (f"LearnedHybrid regret {reg['LearnedHybrid+LT']}% worse than "
+         f"HybridPolicy {reg['Hybrid+LT']}%")
+    _, distilled = _distill(state, train_arrays, heldout, T=12)
+    ratio = distilled["heldout_cost_ratio"]
+    print(f"smoke learned distill: heldout cost ratio {ratio} "
+          f"(bound {1 + DISTILL_BOUND}), "
+          f"{distilled['n_leaves']} rules")
+    assert ratio <= 1.0 + DISTILL_BOUND, \
+        (f"distilled ladder heldout cost ratio {ratio} exceeds its stated "
+         f"bound {1 + DISTILL_BOUND}")
+
+
+def main() -> list:
+    os.makedirs(OUT, exist_ok=True)
+    res = run()
+    with open(os.path.join(OUT, "bench_learned.json"), "w") as f:
+        json.dump(_stamp(res), f, indent=2)
+    rows = []
+    for pair, reg in res["heldout_regret_pct"].items():
+        rows.append((f"learned_{pair.replace('/', '_')}",
+                     reg["Learned+LT"],
+                     f"qlearn={reg['QLearn+LT']}%,"
+                     f"random={reg['RandomSel']}%,"
+                     f"sim={reg['SimPolicy+LT']}%,"
+                     f"learnedhybrid={reg['LearnedHybrid+LT']}%"))
+    d = res["distilled"]
+    rows.append(("learned_distill_ratio", d["heldout_cost_ratio"],
+                 f"agreement={d['teacher_agreement']},"
+                 f"leaves={d['n_leaves']}"))
+    lat = res["decision_latency_us"]
+    rows.append(("learned_decide_warm_us", lat["Learned_warm"],
+                 f"sim_warm={lat['SimPolicy_warm']}us,"
+                 f"sim_cold={lat['SimPolicy_cold']}us"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    # allow `python benchmarks/bench_learned.py` from the repo root
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for row in main():
+            print(f"{row[0]},{row[1]:.3f},{row[2]}")

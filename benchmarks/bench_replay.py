@@ -19,7 +19,6 @@ import json
 import os
 import time
 
-import numpy as np
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "results")
 

@@ -18,7 +18,6 @@ import json
 import os
 import time
 
-import numpy as np
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "results")
 

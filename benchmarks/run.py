@@ -20,6 +20,7 @@ Benches:
     fleet        §Fleet      trace-driven routing over replica groups
     faults       §Faults     failure recovery value + crash-safe kill-resume
     shard        §Mesh       per-device-count scaling of the sharded lanes
+    learned      §Learned    offline-trained policy: held-out regret + distill
 
 ``--smoke`` is the single CI entry point: it runs every registered smoke
 gate for the requested tier and ALWAYS writes ``results/smoke_summary.json``
@@ -50,6 +51,7 @@ SMOKE_GATES = {
     "perturb": ("bench_perturb", ("tier1", "slow")),
     "fleet": ("bench_fleet", ("tier1", "slow")),
     "faults": ("bench_faults", ("tier1", "slow")),
+    "learned": ("bench_learned", "tier1"),
     "replay": ("bench_replay", "slow"),
     "event_kernel": ("bench_event_kernel", "slow"),
     # its CI job boots with XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -126,8 +128,8 @@ def main() -> None:
 
     from . import (bench_anova, bench_autotune, bench_backends, bench_chunks,
                    bench_cov, bench_degradation, bench_event_kernel,
-                   bench_faults, bench_fleet, bench_perturb, bench_replay,
-                   bench_roofline, bench_serving, bench_shard,
+                   bench_faults, bench_fleet, bench_learned, bench_perturb,
+                   bench_replay, bench_roofline, bench_serving, bench_shard,
                    bench_simpolicy, bench_traces)
     benches = {
         "chunks": bench_chunks.main,
@@ -146,6 +148,7 @@ def main() -> None:
         "fleet": bench_fleet.main,
         "faults": bench_faults.main,
         "shard": bench_shard.main,
+        "learned": bench_learned.main,
     }
     if args.only:
         benches = {args.only: benches[args.only]}

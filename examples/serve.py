@@ -14,11 +14,9 @@ wave times).  Compare against the fixed-algorithm baselines.
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, smoke_reduce
 from repro.core import ALGORITHM_NAMES

@@ -1,0 +1,157 @@
+#!/usr/bin/env python
+"""Perf-trajectory gate: fresh nightly bench results vs the committed ones.
+
+For every ``results/bench_*.json`` with a headline-metric registry entry,
+compare the freshly-produced working-tree file against the version
+committed at a git ref (default HEAD).  A headline metric drifting more
+than ``WARN`` (10%) emits a GitHub ``::warning::``; more than ``FAIL``
+(2x, i.e. 100% relative change) fails the job.  Boolean invariants
+(bit-exactness flags) must never flip to false.
+
+Results produced on a different platform are not comparable — every bench
+stamps ``meta`` (``benchmarks/_meta.py``) and files whose ``meta.platform``
+or ``meta.device_count`` differ from the baseline are skipped, so a laptop
+re-run never trips a gate calibrated on CI timings.
+
+    PYTHONPATH=src python scripts/check_perf_trajectory.py [--ref HEAD] \\
+        [--results results]
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+WARN = 0.10      # >10% drift on a headline metric -> ::warning::
+FAIL = 1.00      # >2x (100% relative change) -> job failure
+FLOOR = 1e-3     # denominator floor so near-zero baselines don't explode
+
+#: headline metrics per bench file: dotted paths, ``*`` matches any key
+REGISTRY = {
+    "bench_replay.json": ["*.speedup"],
+    "bench_fleet.json": ["traces.*.mean_rate"],
+    "bench_faults.json": ["recovery.on.throughput",
+                          "recovery.off.throughput",
+                          "recovery.on.p99"],
+    "bench_shard.json": ["workloads.*.d1_s"],
+    "bench_event_kernel.json": ["lanes.*.while_loop_s"],
+    "bench_backends.json": ["cov.*.jax"],
+    "bench_learned.json": ["decision_latency_us.Learned_warm",
+                           "distilled.teacher_agreement"],
+}
+
+#: boolean invariants that must never flip to false
+INVARIANTS = {
+    "bench_faults.json": ["kill_resume.bit_equal"],
+    "bench_event_kernel.json": ["lanes.*.bitexact"],
+}
+
+
+def _walk(node, parts, prefix=""):
+    """Expand a dotted path (with ``*`` wildcards) into (label, value)."""
+    if not parts:
+        yield prefix.rstrip("."), node
+        return
+    head, rest = parts[0], parts[1:]
+    if not isinstance(node, dict):
+        return
+    keys = sorted(node) if head == "*" else ([head] if head in node else [])
+    for k in keys:
+        yield from _walk(node[k], rest, f"{prefix}{k}.")
+
+
+def _metrics(record, paths):
+    out = {}
+    for path in paths:
+        for label, val in _walk(record, path.split(".")):
+            if isinstance(val, (int, float)) and not isinstance(val, bool):
+                out[label] = float(val)
+    return out
+
+
+def _load_committed(ref, relpath):
+    try:
+        blob = subprocess.run(["git", "show", f"{ref}:{relpath}"],
+                              capture_output=True, check=True)
+    except subprocess.CalledProcessError:
+        return None
+    try:
+        return json.loads(blob.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def _platform_key(record):
+    meta = record.get("meta")
+    if not isinstance(meta, dict):
+        return None
+    return (meta.get("platform"), meta.get("device_count"))
+
+
+def check_file(name, fresh, base):
+    """Returns (warnings, failures) message lists for one bench file."""
+    warns, fails = [], []
+    for label, old in sorted(_metrics(base, REGISTRY[name]).items()):
+        new = _metrics(fresh, REGISTRY[name]).get(label)
+        if new is None:
+            warns.append(f"{name}:{label} missing from fresh results")
+            continue
+        rel = abs(new - old) / max(abs(old), FLOOR)
+        line = (f"{name}:{label} {old:g} -> {new:g} "
+                f"({100 * rel:+.1f}% drift)")
+        if rel > FAIL:
+            fails.append(line)
+        elif rel > WARN:
+            warns.append(line)
+    for path in INVARIANTS.get(name, ()):
+        for label, val in _walk(fresh, path.split(".")):
+            if val is False:
+                fails.append(f"{name}:{label} invariant flipped to false")
+    return warns, fails
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="compare fresh bench results vs committed baselines")
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref holding the baseline results")
+    ap.add_argument("--results", default="results",
+                    help="directory with the freshly-produced json files")
+    args = ap.parse_args()
+
+    n_checked, warns, fails = 0, [], []
+    for name in sorted(REGISTRY):
+        path = os.path.join(args.results, name)
+        if not os.path.exists(path):
+            print(f"skip  {name}: no fresh results")
+            continue
+        with open(path) as f:
+            fresh = json.load(f)
+        base = _load_committed(args.ref, f"results/{name}")
+        if base is None:
+            print(f"skip  {name}: no committed baseline at {args.ref}")
+            continue
+        if _platform_key(fresh) != _platform_key(base):
+            print(f"skip  {name}: platform stamp differs "
+                  f"({_platform_key(base)} -> {_platform_key(fresh)})")
+            continue
+        w, x = check_file(name, fresh, base)
+        warns += w
+        fails += x
+        n_checked += 1
+        print(f"check {name}: "
+              f"{len(_metrics(base, REGISTRY[name]))} metrics, "
+              f"{len(w)} warnings, {len(x)} failures")
+
+    for msg in warns:
+        print(f"::warning::perf trajectory: {msg}")
+    for msg in fails:
+        print(f"::error::perf trajectory: {msg}")
+    print(f"perf trajectory: {n_checked} files checked, "
+          f"{len(warns)} warnings, {len(fails)} failures")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

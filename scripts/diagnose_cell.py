@@ -30,7 +30,6 @@ def main():
     args = ap.parse_args()
 
     # monkey-patch run_cell to keep the compiled object
-    from repro.configs import SHAPES, get_config
     import repro.launch.dryrun as dr
     hlo_holder = {}
     orig = jax.stages.Lowered.compile

@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Mass-produce counterfactual transition logs for offline policy training.
+
+One shard per (application, system, scenario) cell of the campaign grid —
+including the ``*_het`` heterogeneous systems and ``PerturbationSpec``
+drift scenarios — each written atomically, so a killed run resumes by
+skipping shards that already exist (``--force`` regenerates).
+
+    PYTHONPATH=src python scripts/gen_translog.py --out data/translog \\
+        --apps tc mandelbrot hacc --systems broadwell epyc_het -T 40
+
+Every shard row carries the priced cost of all 12 portfolio algorithms for
+its exact (profile, chunk-param, perturbation) context, logged by a
+:class:`repro.sim.translog.TransitionLogger` riding a lockstep replay.
+Feed the shards to ``repro.runtime.policy_trainer`` (see
+``benchmarks/bench_learned.py`` for the train → evaluate → distill loop).
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.sim import (APPLICATIONS, HETERO_SYSTEMS, SYSTEMS,  # noqa: E402
+                       CellSpec, ReplayBatch, TransitionLogger, get_system,
+                       drift_spec, noise_burst_spec, pe_slowdown_spec)
+
+#: perturbation scenarios per cell: clean, a mid-run PE slowdown, a noise
+#: burst, and a workload drift — the telemetry regimes the net must cover
+def _scenarios(P: int, T: int):
+    t0, t1 = T // 4, (3 * T) // 4
+    return {
+        "clean": None,
+        "peslow": pe_slowdown_spec(P, frac=0.25, factor=6.0, t0=t0, t1=t1),
+        "noise": noise_burst_spec(factor=8.0, t0=t0, t1=t1),
+        "drift": drift_spec("cov", t0=t0, factor=2.0),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="generate counterfactual translog shards")
+    ap.add_argument("--out", default="data/translog",
+                    help="output directory for npz shards")
+    ap.add_argument("--apps", nargs="*", default=sorted(APPLICATIONS),
+                    help="applications (default: all)")
+    ap.add_argument("--systems", nargs="*",
+                    default=sorted(SYSTEMS) + sorted(HETERO_SYSTEMS),
+                    help="systems (default: all, incl. *_het)")
+    ap.add_argument("--scenarios", nargs="*",
+                    choices=["clean", "peslow", "noise", "drift"],
+                    default=["clean", "peslow", "noise", "drift"])
+    ap.add_argument("-T", type=int, default=40,
+                    help="time steps per cell (default 40)")
+    ap.add_argument("--selector", default="ExpertSel",
+                    help="behaviour selector driving the lanes (costs are "
+                    "counterfactual, so any selector yields the same "
+                    "training signal)")
+    ap.add_argument("--stride", type=int, default=1,
+                    help="log every k-th step only")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default=None,
+                    help="replay backend (python|jax)")
+    ap.add_argument("--force", action="store_true",
+                    help="regenerate shards that already exist")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    total_rows = 0
+    for app in args.apps:
+        for sysname in args.systems:
+            P = get_system(sysname).P
+            scen = _scenarios(P, args.T)
+            for tag in args.scenarios:
+                path = os.path.join(args.out,
+                                    f"{app}__{sysname}__{tag}.npz")
+                if os.path.exists(path) and not args.force:
+                    print(f"skip  {path} (exists)")
+                    continue
+                t0 = time.perf_counter()
+                tl = TransitionLogger(sim_backend=args.backend,
+                                      stride=args.stride)
+                spec = CellSpec(app=app, system=sysname,
+                                selector=args.selector, perturb=scen[tag])
+                ReplayBatch([spec], T=args.T, seed=args.seed,
+                            backend=args.backend, translog=tl).run()
+                tl.save(path)
+                total_rows += len(tl)
+                print(f"wrote {path}: {len(tl)} rows "
+                      f"({time.perf_counter() - t0:.1f}s)")
+    print(f"total: {total_rows} transitions under {args.out}/")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,10 +9,9 @@ encodes the long_500k sub-quadratic skip rule (DESIGN.md §4).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
 
-import jax.numpy as jnp
 
 
 @dataclass(frozen=True)

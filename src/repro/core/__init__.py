@@ -24,6 +24,11 @@ from .selectors import (FixedPolicy, OraclePolicy, RandomPolicy,
 from .simpolicy import (Candidate, SimAssistedHybrid, SimPolicy,
                         SimUnavailable, SIM_POLICY_ENV, SIM_POLICY_NAMES,
                         is_sim_policy, resolve_sim_policy)
+from .learned import (DistilledLadder, FEATURE_NAMES, LEARNED_POLICY_NAMES,
+                      LEARNED_STATE_ENV, LearnedHybrid, LearnedPolicy,
+                      LoopFeaturizer, N_FEATURES, distill_ladder,
+                      is_learned_policy, make_learned_state,
+                      resolve_default_state, set_default_state)
 from .service import RegionInstance, SelectionService
 from .persistence import (AgentStatsLogger, save_agent, load_agent,
                           save_policy_state, load_policy_state,
@@ -45,6 +50,11 @@ __all__ = [
     "Candidate", "SimPolicy", "SimAssistedHybrid", "SimUnavailable",
     "SIM_POLICY_ENV", "SIM_POLICY_NAMES", "is_sim_policy",
     "resolve_sim_policy", "PageHinkley",
+    # offline-trained learned selection
+    "LearnedPolicy", "LearnedHybrid", "LoopFeaturizer", "DistilledLadder",
+    "distill_ladder", "FEATURE_NAMES", "N_FEATURES", "LEARNED_POLICY_NAMES",
+    "LEARNED_STATE_ENV", "is_learned_policy", "make_learned_state",
+    "set_default_state", "resolve_default_state",
     # agents + persistence
     "QLearnAgent", "SarsaAgent", "explore_first_sequence",
     "AgentStatsLogger", "save_agent", "load_agent", "save_policy_state",

@@ -23,7 +23,7 @@ it configurable (see DESIGN.md §8).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 

@@ -13,7 +13,7 @@ Triangular memberships, max-min inference, centroid defuzzification.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 
 def tri(x: float, a: float, b: float, c: float) -> float:

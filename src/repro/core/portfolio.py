@@ -26,8 +26,8 @@ exceed the remaining iterations.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import List, Optional
+from dataclasses import dataclass
+from typing import List
 
 ALGORITHM_NAMES: List[str] = [
     "STATIC",       # 0  OpenMP static (or static,chunk when a param is given)

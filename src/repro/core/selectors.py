@@ -38,9 +38,12 @@ from .rewards import REWARD_POSITIVE
 SELECTOR_NAMES = ["Fixed", "RandomSel", "ExhaustiveSel", "ExpertSel",
                   "QLearn", "SARSA", "Hybrid", "Oracle"]
 #: the structured-API spelling of the same registry (plus the
-#: simulation-assisted methods, which need a ``simulator=``)
+#: simulation-assisted methods, which need a ``simulator=``, and the
+#: offline-trained learned methods, which want a ``featurizer=`` +
+#: trained ``state=``)
 POLICY_NAMES = SELECTOR_NAMES + ["SimPolicy", "SimHybrid", "ReactiveSim",
-                                 "ReactiveHybrid", "AwareSim"]
+                                 "ReactiveHybrid", "AwareSim",
+                                 "Learned", "LearnedHybrid"]
 
 
 # ---------------------------------------------------------------------------
@@ -492,7 +495,25 @@ def make_policy(name: str, **kw) -> SelectionPolicy:
                                          "alpha_decay", "decay_mode",
                                          "n_actions", "detector"),
                                  **_reward_kw(kw))
-    raise ValueError(f"unknown selection policy {name!r}")
+    # offline-trained learned methods (repro.core.learned) — lazily
+    # imported for the same reason; weights default to the process-wide
+    # state (set_default_state / REPRO_LEARNED_STATE), cold policies fall
+    # back to the expert ladder
+    from .learned import _LEARNED_ALIASES, LearnedHybrid, LearnedPolicy
+    canon = _LEARNED_ALIASES.get(name)
+    if canon is not None:
+        if canon == "Learned":
+            return LearnedPolicy(**_pick(kw, "featurizer", "state",
+                                         "n_actions", "horizon"),
+                                 **_reward_kw(kw))
+        return LearnedHybrid(**_pick(kw, "featurizer", "state", "top_k",
+                                     "horizon", "agent", "expert_steps",
+                                     "window", "alpha", "gamma",
+                                     "alpha_decay", "decay_mode",
+                                     "n_actions"),
+                             **_reward_kw(kw))
+    raise ValueError(f"unknown selection policy {name!r}; "
+                     f"choose from {POLICY_NAMES}")
 
 
 # ---------------------------------------------------------------------------

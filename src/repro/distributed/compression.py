@@ -15,7 +15,6 @@ documented in EXPERIMENTS.md §Perf).
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

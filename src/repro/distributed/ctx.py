@@ -12,7 +12,7 @@ a context is installed (smoke tests on one CPU device stay constraint-free).
 from __future__ import annotations
 
 from contextlib import contextmanager
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 from jax.sharding import PartitionSpec as P

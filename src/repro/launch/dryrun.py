@@ -16,13 +16,11 @@ other jax import — 512 placeholder host devices).  Usage:
 
 import argparse
 import json
-import re
 import sys
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCH_NAMES, SHAPES, applicable, get_config

@@ -8,15 +8,14 @@ allocation.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelConfig, ShapeConfig, SHAPES
+from ..configs.base import ModelConfig, ShapeConfig
 from ..models.decode import decode_cache_specs, decode_step
-from ..models.model import forward, init_params, loss_fn, logits_fn
+from ..models.model import init_params, loss_fn
 from ..models.decode import prefill
 from ..optim.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
 

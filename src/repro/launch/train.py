@@ -13,7 +13,6 @@ exercise the restart path.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 from ..configs import ARCH_NAMES, get_config, smoke_reduce
 from ..data import DataConfig

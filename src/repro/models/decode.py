@@ -14,7 +14,6 @@ and the ``decode_*`` dry-run shapes lower.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Dict, Tuple
 
 import jax
@@ -23,8 +22,8 @@ from jax import lax
 
 from ..configs.base import ModelConfig
 from .layers import layer_norm, rms_norm
-from .model import (_dense_block, _dtype, _encdec_forward, _moe_block_apply,
-                    _sinusoid, forward, logits_fn)
+from .model import (_dense_block, _dtype, _moe_block_apply, _sinusoid, forward,
+                    logits_fn)
 from .ssm import ssm_layer_apply
 
 

@@ -11,8 +11,6 @@ the XLA-portable twin of the Pallas flash-attention kernel in
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -23,9 +23,7 @@ from .layers import (apply_mrope, apply_rope, chunked_attention,
                      decode_attention, full_attention, gelu_mlp, layer_norm,
                      moe_block, rms_norm, swiglu)
 from .ssm import init_ssm_layer, ssm_layer_apply
-from ..distributed.ctx import (attn_bf16, attn_remat,
-                               constrain_boundary,
-                               constrain_expert_weights,
+from ..distributed.ctx import (attn_bf16, attn_remat, constrain_boundary,
                                moe_groups)
 
 ATTN_CHUNK_THRESHOLD = 2048   # use online-softmax attention above this S
@@ -48,7 +46,8 @@ def _init_attn(key, cfg: ModelConfig, dtype):
         "wq": (jax.random.normal(ks[0], (D, H * hd)) * s).astype(dtype),
         "wk": (jax.random.normal(ks[1], (D, K * hd)) * s).astype(dtype),
         "wv": (jax.random.normal(ks[2], (D, K * hd)) * s).astype(dtype),
-        "wo": (jax.random.normal(ks[3], (H * hd, D)) * s / math.sqrt(2 * max(cfg.n_layers, 1))).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (H * hd, D)) * s
+               / math.sqrt(2 * max(cfg.n_layers, 1))).astype(dtype),
     }
     if cfg.qk_norm:
         p["q_norm"] = jnp.ones((hd,), dtype)
@@ -66,7 +65,8 @@ def _init_dense_layer(key, cfg: ModelConfig, dtype):
         **_init_attn(k_attn, cfg, dtype),
         "w_gate": (jax.random.normal(k1, (D, F)) * s).astype(dtype),
         "w_up": (jax.random.normal(k2, (D, F)) * s).astype(dtype),
-        "w_down": (jax.random.normal(k3, (F, D)) * s / math.sqrt(2 * max(cfg.n_layers, 1))).astype(dtype),
+        "w_down": (jax.random.normal(k3, (F, D)) * s
+                   / math.sqrt(2 * max(cfg.n_layers, 1))).astype(dtype),
     }
     return p
 
@@ -82,7 +82,8 @@ def _init_moe_layer(key, cfg: ModelConfig, dtype):
         "router": (jax.random.normal(kr, (D, E)) * s).astype(dtype),
         "we_gate": (jax.random.normal(k1, (E, D, F)) * s).astype(dtype),
         "we_up": (jax.random.normal(k2, (E, D, F)) * s).astype(dtype),
-        "we_down": (jax.random.normal(k3, (E, F, D)) * s / math.sqrt(2 * cfg.n_layers)).astype(dtype),
+        "we_down": (jax.random.normal(k3, (E, F, D)) * s
+                    / math.sqrt(2 * cfg.n_layers)).astype(dtype),
     }
 
 

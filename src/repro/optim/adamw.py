@@ -7,10 +7,8 @@ reduced dtype (``moment_dtype``) for the memory-constrained dry-run configs
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from functools import partial
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import signal
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
 import jax

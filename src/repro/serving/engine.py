@@ -21,14 +21,13 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core import (N_ALGORITHMS, SelectionService, exp_chunk, is_sim_policy,
-                    make_portfolio, percent_load_imbalance,
-                    resolve_sim_policy)
+                    percent_load_imbalance, resolve_sim_policy)
 from ..core.api import Observation
 from ..core.portfolio import make_algorithm
 from ..core.simpolicy import Candidate, SimUnavailable

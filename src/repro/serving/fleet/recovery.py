@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import zlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 __all__ = ["RecoveryPolicy", "RecoveryLedger", "RetryEntry",
            "BASELINE_RECOVERY"]

@@ -17,6 +17,8 @@ from .perturb import (FleetPerturb, GroupSlowdown, NoiseBurst, PEFailure,
                       PESlowdown, PerturbationSpec, WorkloadDrift,
                       drift_spec, noise_burst_spec, pe_slowdown_spec)
 from .whatif import LoopWhatIf, noise_free
+from .translog import (TRANSLOG_VERSION, TransitionLogger, load_shards,
+                       load_translog, save_translog)
 from .campaign import (CampaignResult, CellSpec, FixedRun, PortfolioSweep,
                        ReplayBatch, SelectorRun, run_campaign,
                        run_campaign_cell, run_fixed, run_selector,
@@ -42,4 +44,6 @@ __all__ = [
     "chunk_param_for", "CHUNK_MODES", "SELECTOR_GRID",
     "EXTENDED_SELECTOR_GRID", "SIM_SELECTOR_GRID",
     "LoopWhatIf", "noise_free",
+    "TransitionLogger", "TRANSLOG_VERSION", "load_translog", "load_shards",
+    "save_translog",
 ]

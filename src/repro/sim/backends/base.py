@@ -23,7 +23,7 @@ from __future__ import annotations
 import abc
 import zlib
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -82,9 +82,9 @@ from ...distributed.sharding import lane_count, lane_spec, pad_lanes
 from ...launch.mesh import campaign_mesh
 from ..workloads import profile_digest as _profile_digest
 from ..workloads import stack_prefix_grids
-from .base import (EVENT_CAP, BatchResult, InstancePerturb, InstanceSpec,
-                   LockstepRequest, SimBackend, combined_pe_scale,
-                   needs_closed_form, sigma_scale_of)
+from .base import (BatchResult, InstancePerturb, InstanceSpec, LockstepRequest,
+                   SimBackend, combined_pe_scale, needs_closed_form,
+                   sigma_scale_of)
 from .python import InstanceResult, _h_eff, run_instance as _py_run_instance
 
 #: lax.while_loop buffer buckets for schedule length (powers of four keep

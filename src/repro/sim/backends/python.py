@@ -22,13 +22,12 @@ Three execution paths:
 from __future__ import annotations
 
 import heapq
-import math
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
 import numpy as np
 
-from ...core.portfolio import ChunkAlgorithm, make_algorithm
+from ...core.portfolio import make_algorithm
 from ...core.metrics import percent_load_imbalance
 from .base import (EVENT_CAP, BatchResult, InstancePerturb, InstanceSpec,
                    SimBackend, combined_pe_scale, needs_closed_form,

@@ -26,12 +26,27 @@ changes: campaign lanes scale out through the backend alone.
 
 from __future__ import annotations
 
-import math
 import zlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+from ..core import (ALGORITHM_NAMES, N_ALGORITHMS, SelectionService,
+                    coefficient_of_variation, exp_chunk, is_learned_policy,
+                    is_sim_policy)
+from ..core.api import Observation
+from ..core.learned import LoopFeaturizer
+from ..core.simpolicy import _SIM_ALIASES
+from .backends import (InstancePerturb, InstanceSpec, LockstepRequest,
+                       get_backend)
+from .perturb import PerturbationSpec
+from .whatif import LoopWhatIf
+from .systems import SystemModel, get_system
+from .workloads import Application, get_application
+
+CHUNK_MODES = ("default", "expChunk")
 
 
 def _digest(label: str) -> int:
@@ -49,19 +64,6 @@ def _lane_digest(selector: str, reward: Optional[str]) -> int:
     Reward-less selectors keep the bare-selector digest, so their historical
     seed tuples (and Figs. 7-8 traces) are unchanged."""
     return _digest(selector if reward is None else f"{selector}+{reward}")
-
-from ..core import (ALGORITHM_NAMES, N_ALGORITHMS, SelectionService,
-                    coefficient_of_variation, exp_chunk, is_sim_policy)
-from ..core.api import Observation
-from ..core.simpolicy import _SIM_ALIASES
-from .backends import (InstancePerturb, InstanceSpec, LockstepRequest,
-                       get_backend)
-from .perturb import PerturbationSpec
-from .whatif import LoopWhatIf
-from .systems import SYSTEMS, SystemModel, get_system
-from .workloads import APPLICATIONS, Application, get_application
-
-CHUNK_MODES = ("default", "expChunk")
 
 
 def chunk_param_for(mode: str, N: int, P: int) -> int:
@@ -221,14 +223,15 @@ class SelectorRun:
 def _lane_service(app: Application, selector: str, reward: Optional[str],
                   seed: int, sweep: Optional[PortfolioSweep],
                   system: Optional[SystemModel] = None,
-                  sim_backend=None
-                  ) -> Tuple[SelectionService, Optional[LoopWhatIf]]:
+                  sim_backend=None, horizon: Optional[int] = None
+                  ) -> Tuple[SelectionService, Optional[object]]:
     """Per-lane service: one independent policy per modified loop (LB4OMP
     loop ids).  Oracle lanes carry per-loop overrides with the per-step
     best from the portfolio sweep.  Simulation-assisted lanes (SimPolicy /
     SimHybrid) additionally get a :class:`LoopWhatIf` candidate pricer on
-    ``sim_backend`` — returned so the replay can bind the current loop
-    context before each decision."""
+    ``sim_backend``, learned lanes a :class:`LoopFeaturizer` — both share
+    the ``set_context`` surface and are returned so the replay can bind
+    the current loop context before each decision."""
     if selector.lower() == "oracle":
         assert sweep is not None, "Oracle needs a portfolio sweep"
         return SelectionService("Oracle", overrides={
@@ -242,6 +245,17 @@ def _lane_service(app: Application, selector: str, reward: Optional[str],
         whatif = LoopWhatIf(system, backend=sim_backend, two_pass=two_pass)
         return SelectionService(selector, reward=reward, seed=seed,
                                 simulator=whatif), whatif
+    if is_learned_policy(selector):
+        # learned lanes bind decision context through a LoopFeaturizer —
+        # the same set_context surface as a what-if pricer, so the replay
+        # drives both through the lane's ``whatif`` slot
+        assert system is not None, "learned lanes need a machine model"
+        fz = LoopFeaturizer(system)
+        # the policy's phase feature must mean the same thing it meant in
+        # the training logs (t / lane T), so the lane horizon rides along
+        hkw = {} if horizon is None else {"horizon": horizon}
+        return SelectionService(selector, reward=reward, seed=seed,
+                                featurizer=fz, **hkw), fz
     return SelectionService(selector, reward=reward, seed=seed), None
 
 
@@ -278,7 +292,8 @@ def run_selector_sequential(app_name: str, system_name: str, selector: str,
     if sim_backend is None:
         sim_backend = backend
     service, whatif = _lane_service(app, selector, reward, seed, sweep,
-                                    system=system, sim_backend=sim_backend)
+                                    system=system, sim_backend=sim_backend,
+                                    horizon=T)
     rng = _lane_rng(app_name, system, selector, chunk_mode, reward, seed)
     total = 0.0
     for t in range(T):
@@ -346,7 +361,7 @@ class _Lane:
         self.T = T
         self.service, self.whatif = _lane_service(
             app, spec.selector, spec.reward, seed, sweep, system=system,
-            sim_backend=sim_backend)
+            sim_backend=sim_backend, horizon=T)
         self.rng = _lane_rng(spec.app, system, spec.selector,
                              spec.chunk_mode, spec.reward, seed)
         self.total = 0.0
@@ -384,6 +399,7 @@ class _StepGroup:
         self._pids: Dict[Tuple, List[int]] = {}
         self.requests: List[LockstepRequest] = []
         self.pending: List = []          # (lane, RegionInstance) per request
+        self.trans: List = []            # translog row index per request
 
     def register(self, key: Tuple, loops) -> List[int]:
         """Share profile rows between lanes with identical loop content —
@@ -427,8 +443,13 @@ class ReplayBatch:
                  seed: int = 0,
                  sweeps: Optional[Dict[Tuple[str, str],
                                        PortfolioSweep]] = None,
-                 backend=None, sim_backend=None):
+                 backend=None, sim_backend=None, translog=None):
         self.bk = get_backend(backend)
+        #: optional :class:`~repro.sim.translog.TransitionLogger` — records
+        #: every lane decision's context + full counterfactual prices for
+        #: offline policy training; pricing draws from the what-if's fixed
+        #: stateless seed, so a logged replay stays bit-identical
+        self.translog = translog
         if sim_backend is None:
             # sim-assisted lanes price candidates on the replay backend by
             # default, so their argmin matches that engine's Oracle
@@ -483,13 +504,19 @@ class ReplayBatch:
                     profile_id=pids[li], alg=d.action,
                     chunk_param=d.chunk_param, rng=lane.rng, perturb=ip))
                 g.pending.append((lane, inst))
+                if self.translog is not None:
+                    g.trans.append(self.translog.log_decision(
+                        lane, t, profile, cp, ip, d))
         for g in groups.values():                             # execute
             res = self.bk.run_lockstep(g.profiles, g.system, g.requests)
             obs = Observation.batch(res.loop_time, res.lib)
-            for (lane, inst), o in zip(g.pending, obs):       # learn
+            for i, ((lane, inst), o) in enumerate(zip(g.pending,
+                                                      obs)):  # learn
                 inst.report(observation=o)
                 inst.close()
                 lane.total += o.loop_time
+                if g.trans and g.trans[i] is not None:
+                    self.translog.log_result(g.trans[i], o.loop_time)
 
     def run(self) -> List[SelectorRun]:
         """Replay every lane to completion; results in lane order."""
@@ -503,7 +530,8 @@ def run_selector(app_name: str, system_name: str, selector: str,
                  T: Optional[int] = None, seed: int = 0,
                  sweep: Optional[PortfolioSweep] = None,
                  backend=None, sim_backend=None,
-                 perturb: Optional[PerturbationSpec] = None) -> SelectorRun:
+                 perturb: Optional[PerturbationSpec] = None,
+                 translog=None) -> SelectorRun:
     """Execute one selection method over the full time-stepped application.
 
     Every modified loop gets an independent policy via ``SelectionService``
@@ -517,7 +545,8 @@ def run_selector(app_name: str, system_name: str, selector: str,
                     chunk_mode=chunk_mode, reward=reward, perturb=perturb)
     sweeps = {(app_name, system_name): sweep} if sweep is not None else None
     return ReplayBatch([spec], T=T, seed=seed, sweeps=sweeps,
-                       backend=backend, sim_backend=sim_backend).run()[0]
+                       backend=backend, sim_backend=sim_backend,
+                       translog=translog).run()[0]
 
 
 # ---------------------------------------------------------------------------
@@ -560,7 +589,8 @@ def run_campaign(cells: Sequence[Tuple[str, str]],
                  chunk_modes=CHUNK_MODES,
                  backend=None,
                  selector_backend=None,
-                 sim_backend=None
+                 sim_backend=None,
+                 translog=None
                  ) -> Dict[Tuple[str, str], CampaignResult]:
     """The full factorial campaign over many Fig. 5 cells at once.
 
@@ -576,7 +606,10 @@ def run_campaign(cells: Sequence[Tuple[str, str]],
     ``selector_backend="python"`` when the adaptive algorithms must see
     exact per-chunk telemetry rather than the JAX surrogates.
     ``sim_backend`` (default: same as ``selector_backend``) prices the
-    candidate sets of simulation-assisted lanes (``SIM_SELECTOR_GRID``)."""
+    candidate sets of simulation-assisted lanes (``SIM_SELECTOR_GRID``).
+    ``translog`` (a :class:`~repro.sim.translog.TransitionLogger`) records
+    every lane decision with full counterfactual prices for offline policy
+    training without touching lane rng streams."""
     if selector_backend is None:
         selector_backend = backend
     sweeps = {
@@ -590,7 +623,7 @@ def run_campaign(cells: Sequence[Tuple[str, str]],
              for sel, reward in selectors]
     runs = ReplayBatch(lanes, T=T, seed=seed, sweeps=sweeps,
                        backend=selector_backend,
-                       sim_backend=sim_backend).run()
+                       sim_backend=sim_backend, translog=translog).run()
     by_cell: Dict[Tuple[str, str], Dict] = {tuple(c): {} for c in cells}
     for spec, run in zip(lanes, runs):
         by_cell[(spec.app, spec.system)][spec.key] = run

@@ -8,10 +8,7 @@ from __future__ import annotations
 
 from .backends.base import EVENT_CAP
 from .backends.python import (H_ATOMIC_ADAPTIVE, MUTEX_ADAPTIVE,
-                              InstanceResult, PythonBackend, run_instance,
-                              _h_eff, _noise, _run_constant_closed,
-                              _run_events, _run_static, _steal_next,
-                              _thread_speeds)
+                              InstanceResult, PythonBackend, run_instance)
 
 __all__ = [
     "EVENT_CAP", "H_ATOMIC_ADAPTIVE", "MUTEX_ADAPTIVE", "InstanceResult",

@@ -9,9 +9,8 @@ try:
 except ImportError:      # dev extra not installed: deterministic fallback
     from _hypothesis_fallback import given, settings, st
 
-from repro.core import (ALGORITHM_NAMES, N_ALGORITHMS, ExhaustiveSel,
-                        QLearnAgent, RandomSel, RewardTracker, SarsaAgent,
-                        SelectionService, explore_first_sequence,
+from repro.core import (ExhaustiveSel, QLearnAgent, RandomSel, RewardTracker,
+                        SarsaAgent, SelectionService, explore_first_sequence,
                         make_selector, REWARD_POSITIVE, REWARD_NEUTRAL,
                         REWARD_NEGATIVE)
 
@@ -172,7 +171,7 @@ def test_selection_service_isolates_loops():
     svc = SelectionService("qlearn", reward_type="LT")
     a0 = svc.begin("L0")
     svc.end("L0", a0, 1.0, 0.0)
-    a1 = svc.begin("L1")
+    svc.begin("L1")
     assert len(svc.history("L0")) == 1
     assert len(svc.history("L1")) == 0
     assert set(svc.regions) == {"L0", "L1"}

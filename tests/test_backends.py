@@ -3,14 +3,13 @@ reference Python event loop — exactly where exactness is possible (noise-free
 chunk sequences, shared closed forms), within tolerance elsewhere."""
 
 import dataclasses
-import os
 
 import numpy as np
 import pytest
 
 from repro.core.jaxsched import chunk_schedule, staticsteal_schedule
-from repro.sim import (EVENT_CAP, InstanceSpec, LoopProfile, backend_names,
-                       get_backend, get_system, sweep_portfolio)
+from repro.sim import (InstanceSpec, LoopProfile, backend_names, get_backend,
+                       get_system, sweep_portfolio)
 
 # P a power of two and unit an exact binary fraction keep the adaptive
 # algorithms' telemetry bit-exact (variance exactly 0, weights exactly 1),

@@ -6,7 +6,7 @@ import os
 import numpy as np
 import pytest
 
-from repro.core import QLearnAgent, SarsaAgent
+from repro.core import QLearnAgent
 from repro.core.persistence import (AgentStatsLogger, load_agent,
                                     load_policy_state, save_agent,
                                     save_policy_state, warm_start)
@@ -18,7 +18,6 @@ from repro.core.persistence import (AgentStatsLogger, load_agent,
 
 def _train_agent(best=5, T=300, spread=50.0):
     a = QLearnAgent()
-    rng = np.random.default_rng(0)
     for _ in range(T):
         act = a.select()
         a.observe(act, 1.0 + spread * abs(act - best))

@@ -5,10 +5,8 @@ import numpy as np
 import pytest
 
 from repro.data import field_rng, request_lengths, synthetic_requests
-from repro.serving import (AdmissionControl, DispatchSimulator, FleetSimulator,
-                           FleetView, ReplicaCostModel, make_router,
-                           make_trace)
-from repro.serving.fleet.router import request_cost
+from repro.serving import (AdmissionControl, FleetSimulator, FleetView,
+                           ReplicaCostModel, make_router, make_trace)
 from repro.sim.backends import get_backend
 
 BURSTY = dict(base_rate=2000.0, burst_factor=6.0, p_enter=0.015, p_exit=0.05)

@@ -1,0 +1,399 @@
+"""Learned selection: featurizer contract, registry + warm-start
+persistence, the counterfactual transition logger, the policy trainer's
+checkpoint/restart discipline (bit-identical resume, SIGTERM final save,
+failure-injection equivalence), LearnedHybrid's net-pruned RL window, and
+ladder distillation."""
+
+import json
+import os
+import signal
+
+import numpy as np
+import pytest
+
+from repro.core import (FEATURE_NAMES, N_ALGORITHMS, N_FEATURES,
+                        LearnedHybrid, LearnedPolicy, LoopFeaturizer,
+                        SelectionService, SimUnavailable, distill_ladder,
+                        is_learned_policy, make_learned_state, make_policy,
+                        set_default_state)
+from repro.core.learned import (LEARNED_STATE_ENV, mlp_forward,
+                                params_from_state)
+from repro.sim import (CellSpec, ReplayBatch, TransitionLogger,
+                       get_application, get_system, load_shards,
+                       load_translog, pe_slowdown_spec, run_selector)
+from repro.runtime.policy_trainer import (PolicyTrainer, PolicyTrainerConfig,
+                                          TransitionDataset)
+
+HIDDEN = 2
+
+
+def const_state(scores, reward="LT"):
+    """A learned state whose net outputs the constant ``scores`` vector for
+    every input (all-zero weights, biases only) — exact, training-free
+    ranking control for policy tests."""
+    scores = np.asarray(scores, np.float32)
+    params = {
+        "w0": np.zeros((N_FEATURES, HIDDEN), np.float32),
+        "b0": np.zeros((HIDDEN,), np.float32),
+        "w1": np.zeros((HIDDEN, HIDDEN), np.float32),
+        "b1": np.zeros((HIDDEN,), np.float32),
+        "w2": np.zeros((HIDDEN, len(scores)), np.float32),
+        "b2": scores,
+    }
+    return make_learned_state(params, reward=reward)
+
+
+def synth_arrays(n=192, seed=0, n_actions=N_ALGORITHMS):
+    """Synthetic translog: the best algorithm flips on the sign of feature
+    0 (a learnable threshold rule with a known ladder form)."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, N_FEATURES)).astype(np.float32)
+    costs = rng.uniform(1.0, 2.0, size=(n, n_actions))
+    best = np.where(X[:, 0] > 0.0, 3, 7)
+    costs[np.arange(n), best] = 0.5
+    return {
+        "features": X, "costs": costs.astype(np.float32),
+        "libs": np.zeros((n, n_actions), np.float32),
+        "chosen": np.zeros(n, np.int16),
+        "measured": np.zeros(n, np.float32),
+        "cell": (np.arange(n) % 2).astype(np.int32),
+        "step": np.zeros(n, np.int32),
+        "perturbed": np.zeros(n, np.bool_),
+        "cell_keys": np.array(["a|x", "b|y"]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# featurizer
+# ---------------------------------------------------------------------------
+
+def test_featurizer_contract():
+    fz = LoopFeaturizer(get_system("broadwell"))
+    with pytest.raises(SimUnavailable):
+        fz.features()
+    profile = get_application("tc").loops(0)[0]
+    fz.set_context(profile, 0)
+    x = fz.features(phase=0.5)
+    assert x.shape == (N_FEATURES,) and x.dtype == np.float32
+    assert np.isfinite(x).all()
+    assert x[FEATURE_NAMES.index("phase")] == 0.5
+    # cov feature reflects tc's power-law imbalance
+    assert x[FEATURE_NAMES.index("cov")] > 0.5
+    # chunk_norm responds to the chunk parameter
+    fz.set_context(profile, 64)
+    assert x[FEATURE_NAMES.index("chunk_norm")] != \
+        fz.features(phase=0.5)[FEATURE_NAMES.index("chunk_norm")]
+
+
+def test_featurizer_perturbation_telemetry():
+    system = get_system("epyc")
+    spec = pe_slowdown_spec(system.P, frac=0.25, factor=6.0, t0=0)
+    ip = spec.instance_perturb(0, system.P)
+    profile = get_application("hacc").loops(0)[0]
+    fz = LoopFeaturizer(system)
+    fz.set_context(profile, 0)
+    clean = fz.features()
+    fz.set_context(profile, 0, perturb=ip)
+    hot = fz.features()
+    i_cov = FEATURE_NAMES.index("pe_cov")
+    i_ratio = FEATURE_NAMES.index("pe_max_ratio")
+    assert clean[i_cov] == 0.0 and clean[i_ratio] == 0.0
+    assert hot[i_cov] > 0.0 and hot[i_ratio] > 0.0
+    # heterogeneous pe_speeds show up without any perturbation
+    fz_het = LoopFeaturizer(get_system("epyc_het"))
+    fz_het.set_context(profile, 0)
+    assert fz_het.features()[i_cov] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# policy + registry + persistence
+# ---------------------------------------------------------------------------
+
+def test_learned_cold_falls_back_to_expert():
+    p = make_policy("Learned")
+    assert isinstance(p, LearnedPolicy) and not p.trained
+    assert p.decide().phase == "expert"
+    assert p.learning_steps > 0          # the expert fallback still learns
+
+
+def test_learned_policy_scores_and_confidence():
+    fz = LoopFeaturizer(get_system("broadwell"))
+    fz.set_context(get_application("tc").loops(0)[0], 0)
+    scores = np.arange(N_ALGORITHMS)[::-1].astype(float)   # best = last
+    p = make_policy("Learned", featurizer=fz,
+                    state=const_state(scores))
+    assert p.trained and p.learning_steps == 0
+    d = p.decide()
+    assert d.action == N_ALGORITHMS - 1 and d.phase == "exploit"
+    assert 0.0 < d.confidence <= 1.0
+
+
+def test_learned_state_roundtrip_and_validation():
+    p = LearnedPolicy(state=const_state(np.arange(N_ALGORITHMS)))
+    state = p.state_dict()
+    q = LearnedPolicy()
+    assert q.load_state_dict(state) is True
+    assert q.state_dict()["params"] == state["params"]
+    bad = dict(state, feature_version=-7)
+    with pytest.raises(ValueError):
+        LearnedPolicy().load_state_dict(bad)
+    with pytest.raises(ValueError):
+        LearnedPolicy(n_actions=5).load_state_dict(state)
+
+
+def test_learned_env_default_state(tmp_path, monkeypatch):
+    path = tmp_path / "weights.json"
+    path.write_text(json.dumps(const_state(np.arange(N_ALGORITHMS))))
+    monkeypatch.setenv(LEARNED_STATE_ENV, str(path))
+    assert make_policy("Learned").trained
+    # a corrupt file degrades to a cold policy instead of raising
+    path.write_text("{not json")
+    with pytest.warns(UserWarning):
+        assert not make_policy("Learned").trained
+
+
+def test_learned_registry_and_aliases():
+    assert is_learned_policy("learned") and is_learned_policy("LearnedHybrid")
+    assert not is_learned_policy("QLearn") and not is_learned_policy(None)
+    assert isinstance(make_policy("mlp"), LearnedPolicy)
+    assert isinstance(make_policy("LearnedHybrid"), LearnedHybrid)
+
+
+def test_learned_service_warm_start(tmp_path):
+    state = const_state(np.arange(N_ALGORITHMS))
+    svc = SelectionService("Learned", store_dir=str(tmp_path), seed=0,
+                          state=state)
+    with svc.instance("loop0") as inst:
+        assert inst.decision.action == 0
+    svc.save()
+    # a fresh service restores the trained net from the store
+    svc2 = SelectionService("Learned", store_dir=str(tmp_path), seed=0)
+    rec = svc2._record("loop0")
+    assert rec.warm_started and rec.policy.trained
+
+
+# ---------------------------------------------------------------------------
+# transition logger
+# ---------------------------------------------------------------------------
+
+def test_translog_counterfactual_rows(tmp_path):
+    tl = TransitionLogger()
+    run_selector("tc", "broadwell", "ExpertSel", T=5, seed=0, translog=tl)
+    assert len(tl) == 5
+    arr = tl.arrays()
+    assert arr["features"].shape == (5, N_FEATURES)
+    assert arr["costs"].shape == (5, N_ALGORITHMS)
+    assert (arr["costs"] > 0).all()
+    assert (arr["measured"] >= 0).all()       # live outcomes were attached
+    path = tl.save(str(tmp_path / "shard.npz"))
+    back = load_translog(path)
+    np.testing.assert_array_equal(back["costs"], arr["costs"])
+    assert [str(k) for k in back["cell_keys"]] == ["tc|broadwell"]
+
+
+def test_translog_replay_bit_identical():
+    """Logging must not perturb the replay: pricing draws from the what-if's
+    fixed stateless seed, never the lane rng."""
+    plain = run_selector("hacc", "epyc", "QLearn", reward="LT", T=6, seed=0)
+    logged = run_selector("hacc", "epyc", "QLearn", reward="LT", T=6, seed=0,
+                          translog=TransitionLogger())
+    assert plain.total == logged.total
+    assert plain.history == logged.history
+
+
+def test_translog_dedupe_and_shard_merge(tmp_path):
+    tl = TransitionLogger()
+    # two lanes, identical decision context -> rows are logged once
+    ReplayBatch([CellSpec(app="tc", system="broadwell", selector="ExpertSel"),
+                 CellSpec(app="tc", system="broadwell", selector="RandomSel")],
+                T=4, seed=0, translog=tl).run()
+    assert len(tl) == 4
+    p1 = tl.save(str(tmp_path / "a.npz"))
+    tl2 = TransitionLogger()
+    ReplayBatch([CellSpec(app="hacc", system="epyc",
+                          selector="ExpertSel")],
+                T=3, seed=0, translog=tl2).run()
+    p2 = tl2.save(str(tmp_path / "b.npz"))
+    merged = load_shards([p1, p2])
+    assert len(merged["features"]) == 7
+    keys = [str(k) for k in merged["cell_keys"]]
+    assert keys == ["tc|broadwell", "hacc|epyc"]
+    assert [keys[c] for c in merged["cell"]] == \
+        ["tc|broadwell"] * 4 + ["hacc|epyc"] * 3
+
+
+# ---------------------------------------------------------------------------
+# policy trainer: the Trainer checkpoint/restart discipline
+# ---------------------------------------------------------------------------
+
+def _trainer(tmp, arrays, n_steps=40, **kw):
+    ds = TransitionDataset(arrays)
+    cfg = PolicyTrainerConfig(ckpt_dir=str(tmp), hidden=8, n_steps=n_steps,
+                              batch_size=32, ckpt_every=10, async_ckpt=False,
+                              **kw)
+    return PolicyTrainer(ds, cfg)
+
+
+def _params_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+               for k in a)
+
+
+def test_policy_trainer_resume_bit_identical(tmp_path):
+    """An interrupted run restored from its checkpoint replays to EXACTLY
+    the uninterrupted result — batches are pure in (seed, step)."""
+    arrays = synth_arrays()
+    clean = _trainer(tmp_path / "clean", arrays).train()
+    tr = _trainer(tmp_path / "cut", arrays)
+    tr.train(20)                           # "the process died at step 20"
+    resumed = _trainer(tmp_path / "cut", arrays).train()
+    assert resumed["final_step"] == clean["final_step"] == 40
+    assert _params_equal(clean["params"], resumed["params"])
+    assert _params_equal(dict(clean["opt"].m), dict(resumed["opt"].m))
+
+
+def test_policy_trainer_failure_restart_equivalence(tmp_path):
+    """Injected node failures (restore latest + replay) reach the same
+    final parameters as a clean run, like runtime.Trainer."""
+    arrays = synth_arrays()
+    clean = _trainer(tmp_path / "clean", arrays).train()
+    tr = _trainer(tmp_path / "faulty", arrays, failure_rate=0.1,
+                  failure_seed=7)
+    faulty = tr.train()
+    assert faulty["restarts"] > 0, "failure injection never fired"
+    assert _params_equal(clean["params"], faulty["params"])
+    assert faulty["final_step"] == 40
+
+
+def test_policy_trainer_sigterm_final_save(tmp_path):
+    """SIGTERM mid-run: the loop finishes the current step, takes a final
+    synchronous checkpoint at that step, and a relaunch resumes to the
+    uninterrupted result."""
+    arrays = synth_arrays()
+    tr = _trainer(tmp_path / "pre", arrays)
+    old = signal.getsignal(signal.SIGTERM)
+    try:
+        tr.install_preemption_handler()
+        orig = tr.ds.batch_at
+        calls = {"n": 0}
+
+        def batch_at(step, batch_size):
+            calls["n"] += 1
+            if calls["n"] == 14:
+                os.kill(os.getpid(), signal.SIGTERM)
+            return orig(step, batch_size)
+
+        tr.ds.batch_at = batch_at
+        out = tr.train()
+    finally:
+        signal.signal(signal.SIGTERM, old)
+    assert out["preempted"] and out["final_step"] == 14
+    assert tr.ckpt.latest_step() == 14     # the final save, not step 10
+    tr.ds.batch_at = orig
+    resumed = _trainer(tmp_path / "pre", arrays).train()
+    clean = _trainer(tmp_path / "clean", arrays).train()
+    assert _params_equal(clean["params"], resumed["params"])
+
+
+def test_policy_trainer_export_folds_normalization(tmp_path):
+    """The exported state consumes RAW feature rows: normalization is
+    folded into the first layer, and the deployed numpy forward matches
+    the training-side ranking."""
+    arrays = synth_arrays()
+    tr = _trainer(tmp_path, arrays, n_steps=600)
+    result = tr.train()
+    state = tr.export_state(result["params"])
+    params = params_from_state(state["params"])
+    X = arrays["features"]
+    pick = np.argmin(mlp_forward(params, X), axis=1)
+    best = np.argmin(arrays["costs"], axis=1)
+    assert (pick == best).mean() > 0.9     # the rule is learnable
+    # regret through the deployed path matches the trainer's measure
+    assert tr.regret(result["params"], "train") < 0.05
+
+
+def test_transition_dataset_holdout_split():
+    arrays = synth_arrays()
+    ds = TransitionDataset(arrays, holdout_cells=["b|y"])
+    assert ds.n_train == 96 and len(ds.holdout_idx) == 96
+    assert set(ds.cell[ds.holdout_idx]) == {1}
+    with pytest.raises(ValueError):
+        TransitionDataset(arrays, holdout_cells=["nope|nope"])
+    x1, y1 = ds.batch_at(5, 16)
+    x2, y2 = ds.batch_at(5, 16)
+    np.testing.assert_array_equal(x1, x2)    # pure in (seed, step)
+    assert y1.shape == (16, N_ALGORITHMS)
+
+
+# ---------------------------------------------------------------------------
+# LearnedHybrid
+# ---------------------------------------------------------------------------
+
+def test_learnedhybrid_window_is_net_topk():
+    fz = LoopFeaturizer(get_system("broadwell"))
+    fz.set_context(get_application("tc").loops(0)[0], 0)
+    scores = np.arange(N_ALGORITHMS, dtype=float)
+    scores[[9, 4, 11, 6]] = [-4, -3, -2, -1]       # net's top-4
+    p = make_policy("LearnedHybrid", featurizer=fz,
+                    state=const_state(scores), top_k=4, expert_steps=1)
+    obs_kw = dict(loop_time=1.0, lib=5.0)
+    from repro.core import Observation
+    d = p.decide()
+    assert d.phase == "expert"
+    p.feedback(d, Observation(**obs_kw))
+    d = p.decide()                                  # builds the RL window
+    assert sorted(p.actions) == [4, 6, 9, 11]
+    assert d.action in p.actions
+    assert p.learning_steps == 1 + 16
+
+
+def test_learnedhybrid_cold_uses_expert_window():
+    p = make_policy("LearnedHybrid", top_k=4, expert_steps=1)
+    from repro.core import Observation
+    d = p.decide()
+    p.feedback(d, Observation(loop_time=1.0, lib=5.0))
+    p.decide()
+    # no net, no context: HybridPolicy's contiguous expert window applies
+    assert p.actions == list(range(p.actions[0], p.actions[0] + 4))
+
+
+# ---------------------------------------------------------------------------
+# distillation
+# ---------------------------------------------------------------------------
+
+def test_distill_ladder_recovers_threshold_rule(tmp_path):
+    arrays = synth_arrays(n=400)
+    tr = _trainer(tmp_path, arrays, n_steps=600)
+    state = tr.export_state(tr.train()["params"])
+    ladder = distill_ladder(state, arrays["features"], max_depth=2)
+    assert ladder.teacher_agreement > 0.9
+    # the ladder is the known generating rule: a split on feature 0
+    pred = ladder.predict(arrays["features"])
+    best = np.argmin(arrays["costs"], axis=1)
+    assert (pred == best).mean() > 0.85
+    rules = ladder.describe()
+    assert 1 < len(rules) <= 4
+    assert any(FEATURE_NAMES[0] in r for r in rules)
+
+
+def test_distill_requires_trained_net():
+    with pytest.raises(ValueError):
+        distill_ladder(LearnedPolicy(), np.zeros((4, N_FEATURES)))
+
+
+# ---------------------------------------------------------------------------
+# campaign integration
+# ---------------------------------------------------------------------------
+
+def test_learned_lane_in_campaign_uses_default_state():
+    """A trained default state turns campaign 'Learned' lanes into pure
+    exploit lanes; the teardown resets the process default."""
+    scores = np.zeros(N_ALGORITHMS)
+    scores[5] = -1.0                       # the net always picks alg 5
+    set_default_state(const_state(scores))
+    try:
+        run = run_selector("tc", "broadwell", "Learned", T=4, seed=0)
+    finally:
+        set_default_state(None)
+    algs = {a for h in run.history.values() for a, _, _ in h}
+    assert algs == {5}

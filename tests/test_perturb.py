@@ -30,8 +30,7 @@ from repro.sim import (CellSpec, HETERO_SYSTEMS, InstancePerturb, LoopWhatIf,
                        NoiseBurst, PEFailure, PESlowdown, PerturbationSpec,
                        ReplayBatch, SYSTEMS, WorkloadDrift, drift_spec,
                        get_application, get_system, hetero_system,
-                       noise_burst_spec, pe_slowdown_spec, run_selector,
-                       run_selector_sequential)
+                       pe_slowdown_spec, run_selector, run_selector_sequential)
 from repro.sim.backends import InstanceSpec, get_backend
 from repro.sim.backends.base import combined_pe_scale, sigma_scale_of
 from repro.sim.backends.jax_batched import (ADAPTIVE_REWEIGHT_ENV,

@@ -1,7 +1,6 @@
 """Unit + property tests for the 12-algorithm scheduling portfolio."""
 
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:      # dev extra not installed

@@ -7,7 +7,7 @@ try:
 except ImportError:      # dev extra not installed
     from _hypothesis_fallback import given, settings, st
 
-from repro.core import ALGORITHM_NAMES, alg_index, exp_chunk
+from repro.core import alg_index, exp_chunk
 from repro.sim import (get_application, get_system, run_instance,
                        run_selector, sweep_portfolio)
 

@@ -303,7 +303,7 @@ def test_dispatch_simulator_binds_caller_supplied_wave_pricer():
                              selector_kw={"simulator": external})
     external._sim = sim2
     assert sim2._whatif is external
-    st = sim2.run_wave(_requests(64))
+    sim2.run_wave(_requests(64))
     assert RecordingWaveWhatIf.bound == 1
     assert sim2.service.policy("dispatch").pred_log  # sim-driven, not expert
 
